@@ -1,0 +1,52 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.anns.engine import GLASS_BASELINE, VariantConfig
+
+# The canonical CRINN-discovered variant: the knob settings the paper's RL
+# converged to (§6: adaptive EF 14.5, multi-entry, batch expansion, early
+# termination, quantized rerank) — used by the table benchmarks so results
+# are reproducible without re-running RL; examples/train_crinn.py shows the
+# discovery loop itself.
+CRINN_DISCOVERED = VariantConfig(
+    degree=32, ef_construction=96, nn_descent_rounds=4, alpha=1.2,
+    num_entry_points=3, adaptive_ef_coef=14.5, gather_width=2, patience=0,
+    quantized_prefilter=True, rerank_factor=8)
+# note: aggressive early termination (patience<=4) caps recall at ~0.90 on
+# this engine — the banded-AUC reward penalizes that hard, so the
+# converged variant keeps convergence detection off for the canonical
+# benchmarks; the knob remains in the RL action space.
+
+# per-module progressive variants (Table 4): each stage inherits the prior
+STAGE_VARIANTS = {
+    "baseline": GLASS_BASELINE,
+    "graph_construction": dataclasses.replace(
+        GLASS_BASELINE, ef_construction=96, alpha=1.2, num_entry_points=3,
+        adaptive_ef_coef=14.5),
+    "search": dataclasses.replace(
+        GLASS_BASELINE, ef_construction=96, alpha=1.2, num_entry_points=3,
+        adaptive_ef_coef=14.5, gather_width=2),
+    "refinement": CRINN_DISCOVERED,
+}
+
+
+def timeit(fn, repeats: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call (blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

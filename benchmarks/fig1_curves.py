@@ -1,0 +1,34 @@
+"""Paper Figure 1: QPS-recall tradeoff curves per dataset for the GLASS
+baseline and the CRINN-optimized variant.  Emits CSV points (terminal
+container: no plotting) suitable for an ann-benchmarks-style plot."""
+from __future__ import annotations
+
+from benchmarks.common import CRINN_DISCOVERED, csv_row
+from repro.anns import Engine, make_dataset
+from repro.anns.bench import qps_recall_curve
+from repro.anns.engine import GLASS_BASELINE
+
+EF_SWEEP = (10, 16, 24, 32, 48, 64, 96, 128, 192)
+
+
+def run(datasets=("sift-128-euclidean",), n_base: int = 5000,
+        n_query: int = 100, repeats: int = 2):
+    rows = []
+    for name in datasets:
+        ds = make_dataset(name, n_base=n_base, n_query=n_query)
+        for label, variant in (("glass", GLASS_BASELINE),
+                               ("crinn", CRINN_DISCOVERED)):
+            eng = Engine(variant, metric=ds.metric)
+            eng.build_index(ds.base)
+            for p in qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP,
+                                      repeats=repeats):
+                rows.append({"dataset": name, "impl": label, "ef": p.ef,
+                             "recall": p.recall, "qps": p.qps})
+                print(csv_row(f"fig1/{name}/{label}/ef{p.ef}",
+                              p.p50_ms * 1e3,
+                              f"recall={p.recall:.3f};qps={p.qps:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

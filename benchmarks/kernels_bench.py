@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks (CPU wall-clock for the jnp reference paths that
+the CPU engine actually executes; Pallas kernels are TPU-targeted and
+validated in interpret mode — their perf story is the roofline analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit
+from repro.kernels.distance.ref import distance_ref
+from repro.kernels.qdist.ref import qdist_ref, quantize_ref
+from repro.kernels.topk.ref import topk_smallest_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    rows = []
+    # distance matrix: the beam-expansion hot loop shape and the rerank shape
+    for (nq, nx, d) in [(128, 4096, 128), (512, 1024, 960), (100, 20000, 25)]:
+        q = jax.random.normal(KEY, (nq, d), jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(KEY, 1), (nx, d), jnp.float32)
+        f = jax.jit(lambda q, x: distance_ref(q, x, "l2"))
+        t = timeit(lambda: f(q, x))
+        gflops = 2 * nq * nx * d / t / 1e9
+        rows.append(("distance", t, gflops))
+        print(csv_row(f"kernel/distance/{nq}x{nx}x{d}", t * 1e6,
+                      f"gflops={gflops:.1f}"))
+
+    # topk
+    for (nq, nx, k) in [(128, 4096, 10), (512, 1024, 100)]:
+        dmat = jax.random.normal(KEY, (nq, nx), jnp.float32)
+        f = jax.jit(lambda d: topk_smallest_ref(d, k))
+        t = timeit(lambda: f(dmat))
+        rows.append(("topk", t, nq * nx / t / 1e6))
+        print(csv_row(f"kernel/topk/{nq}x{nx}k{k}", t * 1e6,
+                      f"melem_per_s={nq*nx/t/1e6:.0f}"))
+
+    # quantized distance (refinement prefilter)
+    for (nq, nx, d) in [(128, 4096, 128)]:
+        q = jax.random.normal(KEY, (nq, d), jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(KEY, 1), (nx, d), jnp.float32)
+        xq, s = quantize_ref(x)
+        f = jax.jit(lambda q, xq, s: qdist_ref(q, xq, s, "l2"))
+        t = timeit(lambda: f(q, xq, s))
+        rows.append(("qdist", t, 2 * nq * nx * d / t / 1e9))
+        print(csv_row(f"kernel/qdist/{nq}x{nx}x{d}", t * 1e6,
+                      f"gflops={2*nq*nx*d/t/1e9:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Compare two dry-run artifacts (baseline vs candidate) — the §Perf
+iteration measurement.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare \
+        artifacts/dryrun_v2/dbrx-132b__train_4k__sp.json \
+        artifacts/perf/dbrx-132b__train_4k__sp_fsdp.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import analyse  # noqa: E402
+
+
+def load(path):
+    with open(path) as f:
+        return analyse(json.load(f)), json.load(open(path))
+
+
+def fmt_delta(b, c):
+    if b == 0:
+        return "n/a"
+    return f"{100.0*(c-b)/b:+.1f}%"
+
+
+def main():
+    (rb, ab), (rc, ac) = load(sys.argv[1]), load(sys.argv[2])
+    print(f"cell: {rb['arch']} x {rb['shape']}")
+    print(f"{'term':12s} {'baseline':>12s} {'candidate':>12s} {'delta':>8s}")
+    for key, label in (("t_compute_s", "compute"), ("t_memory_s", "memory"),
+                       ("t_collective_s", "collective")):
+        print(f"{label:12s} {rb[key]*1e3:10.1f}ms {rc[key]*1e3:10.1f}ms "
+              f"{fmt_delta(rb[key], rc[key]):>8s}")
+    mb = (ab['memory'].get('argument_bytes') or 0) + (ab['memory'].get('temp_bytes') or 0)
+    mc = (ac['memory'].get('argument_bytes') or 0) + (ac['memory'].get('temp_bytes') or 0)
+    print(f"{'hbm args+tmp':12s} {mb/1e9:10.2f}GB {mc/1e9:10.2f}GB "
+          f"{fmt_delta(mb, mc):>8s}   (fits 16GB: {mb<=16e9} -> {mc<=16e9})")
+    print(f"{'dominant':12s} {rb['dominant']:>12s} {rc['dominant']:>12s}")
+    print(f"{'useful':12s} {rb['useful_ratio']:12.3f} {rc['useful_ratio']:12.3f}")
+    print(f"{'roofline':12s} {rb['roofline_fraction']:11.1%} "
+          f"{rc['roofline_fraction']:11.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report artifacts/dryrun_v2
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import analyse  # noqa: E402
+
+V5E_HBM = 16e9
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}GB"
+
+
+def dryrun_table(artifact_dir: str) -> str:
+    lines = [
+        "| arch | shape | mesh | devices | compile | args/dev | temp/dev | fits 16GB | collectives (count) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            a = json.load(f)
+        mem = a["memory"]
+        args_b = mem.get("argument_bytes")
+        temp_b = mem.get("temp_bytes")
+        tot = (args_b or 0) + (temp_b or 0)
+        fits = "yes" if tot <= V5E_HBM else f"NO ({tot/1e9:.0f}GB)"
+        colls = ", ".join(
+            f"{k}x{v['count']}" for k, v in sorted(a["collectives"].items())
+            if isinstance(v, dict))
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | {a['num_devices']} "
+            f"| {a['compile_s']}s | {_fmt_bytes(args_b)} | {_fmt_bytes(temp_b)} "
+            f"| {fits} | {colls} |")
+    return "\n".join(lines)
+
+
+def roofline_table(artifact_dir: str, tag: str = "sp") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | useful | roofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(artifact_dir, f"*__{tag}.json"))):
+        with open(path) as f:
+            a = json.load(f)
+        r = analyse(a)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f}ms "
+            f"| {r['t_memory_s']*1e3:.2f}ms | {r['t_collective_s']*1e3:.2f}ms "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.1%} |")
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun_v2"
+    print("## Dry-run\n")
+    print(dryrun_table(d))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(d))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_device / 197 TF/s      (bf16 MXU peak)
+    memory term     = HLO_bytes_per_device / 819 GB/s      (HBM)
+    collective term = sum(algo_factor * payload) / 50 GB/s (ICI per link)
+
+``cost_analysis`` is per-partition (verified by calibration); collective
+payloads are parsed from the optimized HLO.  Ring algorithm factors:
+all-reduce moves ~2x payload, all-gather/reduce-scatter ~1x (times
+(N-1)/N ~= 1), all-to-all ~1x, collective-permute 1x.
+
+Also reports MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*B (decode)
+vs HLO FLOPs — the "useful compute" ratio that exposes remat/capacity/
+masked-attention waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+ALGO_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+SHAPE_TOKENS = {          # global tokens processed per step
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 1 * 128,
+    "long_500k": 1 * 1,
+}
+
+
+def analyse(art: dict) -> dict:
+    n_dev = art["num_devices"]
+    flops = art["flops"]                      # per device
+    mem_bytes = art["bytes_accessed"]         # per device
+    # flash adjustment: swap XLA's materialized attention-score bytes for
+    # the Pallas flash kernel's streaming traffic (measured by identity-core
+    # differencing in the dry-run) — the TPU-real memory term.
+    adj = art.get("attn_adjustment")
+    mem_bytes_raw = mem_bytes
+    if adj and adj.get("bytes_flash_adjusted"):
+        mem_bytes = adj["bytes_flash_adjusted"]
+    coll = art["collectives"]
+    coll_eff = sum(ALGO_FACTOR.get(k, 1.0) * v["bytes"]
+                   for k, v in coll.items() if isinstance(v, dict))
+
+    t_comp = flops / PEAK_FLOPS
+    t_mem = mem_bytes / HBM_BW
+    t_coll = coll_eff / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    tokens = SHAPE_TOKENS[art["shape"]]
+    n_active = art["active_params"]
+    if art["shape"] == "train_4k":
+        model_flops = 6.0 * n_active * tokens / n_dev
+    else:  # decode/prefill: forward only
+        model_flops = 2.0 * n_active * tokens / n_dev
+    useful = model_flops / flops if flops else 0.0
+
+    # roofline fraction: useful model FLOPs per step over what the chip
+    # could do in the step's bounding time
+    t_bound = max(terms.values())
+    frac = (model_flops / PEAK_FLOPS) / t_bound if t_bound > 0 else 0.0
+
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant, "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "hlo_flops": flops, "hlo_bytes": mem_bytes,
+        "hlo_bytes_raw": mem_bytes_raw,
+        "collective_bytes": coll_eff,
+        "compile_s": art["compile_s"],
+        "tag": art.get("runtime_overrides", {}),
+    }
+
+
+def run(artifact_dir: str = "artifacts/dryrun", mesh: str = "sp",
+        pattern: str = "*"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir,
+                                              f"{pattern}__{mesh}.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        rows.append(analyse(art))
+    return rows
+
+
+def print_table(rows: list[dict]):
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'bound':>10s} {'useful':>7s} {'roofline':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"{r['t_compute_s']*1e3:9.2f}ms {r['t_memory_s']*1e3:9.2f}ms "
+              f"{r['t_collective_s']*1e3:9.2f}ms {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:8.1%}")
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    rows = run(d)
+    print_table(rows)

@@ -1,0 +1,61 @@
+"""Benchmark entry point — one section per paper table/figure plus the
+kernel microbench and the roofline summary.  Prints
+``name,us_per_call,derived`` CSV rows (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller datasets / fewer repeats")
+    ap.add_argument("--skip-anns", action="store_true")
+    ap.add_argument("--artifacts", default="artifacts/dryrun_v2")
+    args = ap.parse_args()
+
+    n_base = 3000 if args.quick else 4000
+    n_query = 64 if args.quick else 100
+    repeats = 1 if args.quick else 2
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import kernels_bench
+    kernels_bench.run()
+
+    if not args.skip_anns:
+        from benchmarks import fig1_curves, table3_qps_recall, table4_progressive
+        table3_qps_recall.run(
+            datasets=("sift-128-euclidean", "glove-25-angular"),
+            n_base=n_base, n_query=n_query, repeats=repeats)
+        table4_progressive.run(
+            datasets=("sift-128-euclidean",),
+            n_base=n_base, n_query=n_query, repeats=repeats)
+        fig1_curves.run(n_base=n_base, n_query=n_query, repeats=repeats)
+
+    # roofline summary from dry-run artifacts (if the sweep has been run)
+    from benchmarks import roofline
+    if os.path.isdir(args.artifacts):
+        rows = roofline.run(args.artifacts)
+        for r in rows:
+            t_bound = max(r["t_compute_s"], r["t_memory_s"],
+                          r["t_collective_s"])
+            print(f"roofline/{r['arch']}/{r['shape']},{t_bound*1e6:.0f},"
+                  f"dominant={r['dominant']};useful={r['useful_ratio']:.3f};"
+                  f"fraction={r['roofline_fraction']:.3f}")
+    else:
+        print(f"# roofline artifacts not found at {args.artifacts}; run "
+              f"PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes "
+              f"--out {args.artifacts}")
+
+
+if __name__ == "__main__":
+    main()

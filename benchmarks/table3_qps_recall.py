@@ -1,0 +1,52 @@
+"""Paper Table 3: QPS at fixed recall levels, CRINN-optimized variant vs
+the GLASS baseline (the paper's RL starting point), per dataset.
+
+Offline scaling: synthetic matched-dimension datasets at reduced N (the
+container's CPU plays the benchmark machine); the comparison structure —
+same datasets, same recall targets, QPS ratio — mirrors the paper's table.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CRINN_DISCOVERED, csv_row
+from repro.anns import Engine, make_dataset
+from repro.anns.bench import qps_at_recall, qps_recall_curve
+from repro.anns.engine import GLASS_BASELINE
+
+RECALL_TARGETS = (0.90, 0.95, 0.99)
+EF_SWEEP = (16, 24, 32, 48, 64, 96, 128, 192)
+
+
+def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
+                  "glove-25-angular"),
+        n_base: int = 5000, n_query: int = 100, repeats: int = 2):
+    rows = []
+    for name in datasets:
+        ds = make_dataset(name, n_base=n_base, n_query=n_query)
+        curves = {}
+        for label, variant in (("glass", GLASS_BASELINE),
+                               ("crinn", CRINN_DISCOVERED)):
+            eng = Engine(variant, metric=ds.metric)
+            eng.build_index(ds.base)
+            curves[label] = qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP,
+                                             repeats=repeats)
+        for r in RECALL_TARGETS:
+            qb = qps_at_recall(curves["glass"], r)
+            qc = qps_at_recall(curves["crinn"], r)
+            if qb is None and qc is None:
+                continue
+            imp = (100.0 * (qc - qb) / qb) if (qb and qc) else float("nan")
+            rows.append({
+                "dataset": name, "recall": r,
+                "crinn_qps": qc, "glass_qps": qb, "improvement_pct": imp,
+            })
+            us = 1e6 / qc if qc else float("nan")
+            print(csv_row(f"table3/{name}/r{r:.2f}", us,
+                          f"crinn_qps={qc and round(qc)};glass_qps={qb and round(qb)};"
+                          f"improvement={imp:+.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

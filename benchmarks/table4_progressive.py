@@ -1,0 +1,51 @@
+"""Paper Table 4: progressive QPS improvement per optimization module
+(graph construction -> search -> refinement), averaged over fixed recall
+levels — validates the sequential optimization strategy (§5.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import STAGE_VARIANTS, csv_row
+from repro.anns import Engine, make_dataset
+from repro.anns.bench import qps_at_recall, qps_recall_curve
+
+RECALL_TARGETS = (0.90, 0.95)
+EF_SWEEP = (16, 24, 32, 48, 64, 96, 128)
+STAGES = ("baseline", "graph_construction", "search", "refinement")
+
+
+def run(datasets=("sift-128-euclidean", "glove-25-angular"),
+        n_base: int = 5000, n_query: int = 100, repeats: int = 2):
+    rows = []
+    for name in datasets:
+        ds = make_dataset(name, n_base=n_base, n_query=n_query)
+        qps_by_stage = {}
+        for stage in STAGES:
+            eng = Engine(STAGE_VARIANTS[stage], metric=ds.metric)
+            eng.build_index(ds.base)
+            curve = qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP,
+                                     repeats=repeats)
+            vals = [qps_at_recall(curve, r) for r in RECALL_TARGETS]
+            vals = [v for v in vals if v]
+            qps_by_stage[stage] = float(np.mean(vals)) if vals else None
+
+        base = qps_by_stage["baseline"]
+        prev = base
+        for stage in STAGES[1:]:
+            cur = qps_by_stage[stage]
+            if base and cur and prev:
+                indiv = 100.0 * (cur - prev) / prev
+                cum = 100.0 * (cur - base) / base
+            else:
+                indiv = cum = float("nan")
+            rows.append({"dataset": name, "stage": stage,
+                         "individual_pct": indiv, "cumulative_pct": cum})
+            us = 1e6 / cur if cur else float("nan")
+            print(csv_row(f"table4/{name}/{stage}", us,
+                          f"individual={indiv:+.1f}%;cumulative={cum:+.1f}%"))
+            prev = cur
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Lower + compile one (arch x shape) cell on the production mesh and
+print its roofline terms — the per-cell view of the multi-pod dry-run.
+
+Runs in its own process (forced host device count):
+
+    PYTHONPATH=src python examples/distributed_dryrun.py glm4-9b train_4k
+"""
+import subprocess
+import sys
+import os
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "stablelm-1.6b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+    out = "artifacts/example_dryrun"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--out", out],
+        env=env, check=True)
+
+    import json
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, src)
+    from benchmarks.roofline import analyse
+    with open(os.path.join(out, f"{arch}__{shape}__sp.json")) as f:
+        art = json.load(f)
+    r = analyse(art)
+    print(f"\nroofline terms for {arch} x {shape} on 16x16:")
+    print(f"  compute    {r['t_compute_s']*1e3:9.2f} ms")
+    print(f"  memory     {r['t_memory_s']*1e3:9.2f} ms")
+    print(f"  collective {r['t_collective_s']*1e3:9.2f} ms")
+    print(f"  dominant: {r['dominant']}   useful-compute ratio: "
+          f"{r['useful_ratio']:.3f}   roofline fraction: "
+          f"{r['roofline_fraction']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: build a TPU-native ANNS index, search it, and run one
+contrastive-RL iteration over the search module.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.anns import Engine, make_dataset
+from repro.anns.datasets import recall_at_k
+from repro.anns.engine import GLASS_BASELINE
+
+
+def main():
+    # --- 1. data + index -------------------------------------------------
+    ds = make_dataset("sift-128-euclidean", n_base=3000, n_query=64)
+    print(f"dataset: {ds.base.shape[0]} base vectors, dim {ds.base.shape[1]}")
+
+    variant = dataclasses.replace(GLASS_BASELINE, alpha=1.2,
+                                  num_entry_points=3)
+    eng = Engine(variant, metric=ds.metric)
+    t0 = time.time()
+    eng.build_index(ds.base)
+    print(f"index built in {time.time()-t0:.1f}s  ({variant.describe()})")
+
+    # --- 2. search --------------------------------------------------------
+    for ef in (16, 48, 96):
+        t0 = time.time()
+        ids, dists = eng.search(ds.queries, k=10, ef=ef)
+        jax.block_until_ready(ids)
+        dt = time.time() - t0
+        rec = recall_at_k(np.asarray(ids), ds.gt, 10)
+        print(f"ef={ef:3d}: recall@10={rec:.3f}  "
+              f"qps={len(ds.queries)/dt:,.0f}")
+
+    # --- 3. one CRINN RL iteration over the search module ------------------
+    from repro.configs import get_config
+    from repro.core import CrinnOptimizer, LoopConfig, Policy
+    from repro.models import Runtime, model
+
+    cfg = dataclasses.replace(get_config("crinn-policy-100m"),
+                              num_layers=2, d_model=128, num_heads=4,
+                              num_kv_heads=4, head_dim=32, d_ff=256,
+                              dtype="float32")
+    rt = Runtime(mesh=None, attn_chunk=64, logit_chunk=64, remat="none")
+    policy = Policy(cfg, model.init_params(jax.random.PRNGKey(0), cfg), rt)
+    loop = LoopConfig(group_size=4, iterations_per_module=1,
+                      ef_sweep=(16, 24, 32, 48), bench_repeats=1)
+    opt = CrinnOptimizer(policy, ds, loop)
+    best = opt.run_module("search")
+    print(f"\nCRINN-selected search variant: {best.describe()}")
+    print(f"exemplar DB now holds {opt.db.size('search')} scored programs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""TPU-native ANNS engine (the substrate CRINN's contrastive RL optimizes).
+
+GLASS/HNSW-family design adapted to TPU (DESIGN.md §2): flat fixed-degree
+graph, batched NN-descent + alpha-prune construction, lockstep batched beam
+search, int8 quantized refinement.  Every optimization knob the paper's RL
+discovered (§6) is a field of :class:`repro.anns.engine.VariantConfig` —
+the action space of the policy.
+"""
+from repro.anns.engine import Engine, VariantConfig
+from repro.anns.datasets import Dataset, make_dataset, DATASET_SPECS
+
+__all__ = ["Engine", "VariantConfig", "Dataset", "make_dataset", "DATASET_SPECS"]

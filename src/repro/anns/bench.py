@@ -1,0 +1,62 @@
+"""QPS / recall measurement harness (the reward's sensor).
+
+Wall-clock QPS is measured on the jitted search with ``block_until_ready``
+— a *real* execution-speed signal, exactly the reward the paper trains on
+(this container's CPU plays the role of the paper's benchmark machine).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.datasets import Dataset, recall_at_k
+from repro.anns.engine import Engine
+
+
+@dataclass(frozen=True)
+class CurvePoint:
+    ef: int
+    qps: float
+    recall: float
+    p50_ms: float
+
+
+DEFAULT_EF_SWEEP = (10, 16, 24, 32, 48, 64, 96, 128, 192, 256)
+
+
+def measure_point(engine: Engine, ds: Dataset, *, ef: int, k: int = 10,
+                  repeats: int = 3, target_recall: float = 0.0) -> CurvePoint:
+    q = jnp.asarray(ds.queries, jnp.float32)
+    # warmup / compile
+    ids, _ = engine.search(q, k=k, ef=ef, target_recall=target_recall)
+    jax.block_until_ready(ids)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ids, _ = engine.search(q, k=k, ef=ef, target_recall=target_recall)
+        jax.block_until_ready(ids)
+        times.append(time.perf_counter() - t0)
+    t = float(np.median(times))
+    rec = recall_at_k(np.asarray(ids), ds.gt, k)
+    return CurvePoint(ef=ef, qps=len(ds.queries) / t, recall=rec,
+                      p50_ms=1e3 * t / len(ds.queries))
+
+
+def qps_recall_curve(engine: Engine, ds: Dataset, *, k: int = 10,
+                     ef_sweep=DEFAULT_EF_SWEEP, repeats: int = 3) -> list[CurvePoint]:
+    pts = []
+    for ef in ef_sweep:
+        tr = 0.95 if ef >= 96 else 0.0   # adaptive-EF variants engage high-recall mode
+        pts.append(measure_point(engine, ds, ef=ef, k=k, repeats=repeats,
+                                 target_recall=tr))
+    return pts
+
+
+def qps_at_recall(points: list[CurvePoint], recall: float) -> float | None:
+    """Best QPS among points meeting the recall target (paper Table 3)."""
+    ok = [p.qps for p in points if p.recall >= recall]
+    return max(ok) if ok else None

@@ -1,0 +1,113 @@
+"""Synthetic stand-ins for the six ann-benchmarks datasets (offline container).
+
+Dimensions and metrics match the paper's Table 2 exactly; base/query counts
+are scaled down (CPU container) — the scale factor is recorded in
+EXPERIMENTS.md.  Clustered mixture-of-Gaussians structure produces a
+non-trivial local intrinsic dimension so graph quality actually matters
+(pure iid Gaussian would make every method look alike).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.kernels.distance.ref import distance_ref
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    dim: int
+    metric: str           # "l2" | "angular"
+    lid: float            # paper's Table 2 (documentation only)
+    clusters: int
+
+
+# paper Table 2: name -> (D, metric, LID)
+DATASET_SPECS: dict[str, DatasetSpec] = {
+    "sift-128-euclidean":  DatasetSpec("sift-128-euclidean", 128, "l2", 9.3, 64),
+    "gist-960-euclidean":  DatasetSpec("gist-960-euclidean", 960, "l2", 20.5, 128),
+    "mnist-784-euclidean": DatasetSpec("mnist-784-euclidean", 784, "l2", 14.1, 10),
+    "glove-25-angular":    DatasetSpec("glove-25-angular", 25, "angular", 9.9, 64),
+    "glove-100-angular":   DatasetSpec("glove-100-angular", 100, "angular", 12.3, 64),
+    "nytimes-256-angular": DatasetSpec("nytimes-256-angular", 256, "angular", 12.5, 96),
+}
+
+
+@dataclass
+class Dataset:
+    spec: DatasetSpec
+    base: np.ndarray        # (N, d) float32 (unit-normalised if angular)
+    queries: np.ndarray     # (nq, d)
+    gt: np.ndarray          # (nq, k_gt) exact nearest neighbor ids
+    k_gt: int
+
+    @property
+    def metric(self) -> str:           # kernel metric name
+        return "l2" if self.spec.metric == "l2" else "ip"
+
+
+def _clustered(rng: np.random.Generator, n: int, dim: int, clusters: int,
+               spread: float = 0.35) -> np.ndarray:
+    """Connected-manifold mixture: tight clusters + bridge points between
+    nearby centers + diffuse background.  Pure isolated Gaussians would make
+    the k-NN graph disconnected (greedy search cannot hop clusters), which
+    real ann-benchmarks data is not."""
+    centers = rng.standard_normal((clusters, dim)).astype(np.float32)
+    n_clu = int(n * 0.6)
+    n_bri = int(n * 0.25)
+    n_bg = n - n_clu - n_bri
+
+    assign = rng.integers(0, clusters, size=n_clu)
+    clu = centers[assign] + spread * rng.standard_normal((n_clu, dim)).astype(np.float32)
+
+    # bridges: interpolations between random center pairs (manifold paths)
+    a = rng.integers(0, clusters, size=n_bri)
+    b = rng.integers(0, clusters, size=n_bri)
+    t = rng.random((n_bri, 1)).astype(np.float32)
+    bri = centers[a] * t + centers[b] * (1 - t)
+    bri += 2 * spread * rng.standard_normal((n_bri, dim)).astype(np.float32)
+
+    bg = 0.8 * rng.standard_normal((n_bg, dim)).astype(np.float32)
+
+    pts = np.concatenate([clu, bri, bg], axis=0).astype(np.float32)
+    return pts[rng.permutation(n)]
+
+
+def exact_ground_truth(base: np.ndarray, queries: np.ndarray, k: int,
+                       metric: str) -> np.ndarray:
+    """Brute force with the jnp oracle, chunked over queries."""
+    out = []
+    b = jnp.asarray(base)
+    for i in range(0, len(queries), 512):
+        q = jnp.asarray(queries[i:i + 512])
+        d = distance_ref(q, b, metric)
+        _, idx = jax.lax.top_k(-d, k)
+        out.append(np.asarray(idx))
+    return np.concatenate(out, axis=0).astype(np.int32)
+
+
+def make_dataset(name: str, n_base: int = 20000, n_query: int = 200,
+                 k_gt: int = 100, seed: int = 0) -> Dataset:
+    spec = DATASET_SPECS[name]
+    rng = np.random.default_rng(seed + hash(name) % (2 ** 31))
+    base = _clustered(rng, n_base, spec.dim, spec.clusters)
+    queries = _clustered(rng, n_query, spec.dim, spec.clusters)
+    if spec.metric == "angular":
+        base /= np.maximum(np.linalg.norm(base, axis=1, keepdims=True), 1e-9)
+        queries /= np.maximum(np.linalg.norm(queries, axis=1, keepdims=True), 1e-9)
+    metric = "l2" if spec.metric == "l2" else "ip"
+    gt = exact_ground_truth(base, queries, k_gt, metric)
+    return Dataset(spec=spec, base=base, queries=queries, gt=gt, k_gt=k_gt)
+
+
+def recall_at_k(found: np.ndarray, gt: np.ndarray, k: int) -> float:
+    """Fraction of true top-k ids recovered (standard ann-benchmarks recall)."""
+    hits = 0
+    for row_found, row_gt in zip(found[:, :k], gt[:, :k]):
+        hits += len(set(row_found.tolist()) & set(row_gt.tolist()))
+    return hits / (len(found) * k)

@@ -1,0 +1,98 @@
+"""Engine facade + VariantConfig — the RL action space.
+
+A :class:`VariantConfig` is one "implementation variant" in CRINN terms:
+the decoded output of a policy completion (see ``repro.core.variant_space``)
+and the unit the speed reward evaluates.  Field groups correspond to the
+paper's three sequentially-optimized modules (§3.1): graph construction,
+search, refinement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import construction, search as search_lib
+from repro.anns.graph import GraphIndex
+
+
+@dataclass(frozen=True)
+class VariantConfig:
+    # -- graph construction module (§6.1) --------------------------------
+    degree: int = 32                 # R: fixed out-degree
+    ef_construction: int = 64        # candidate-pool breadth per round
+    nn_descent_rounds: int = 4
+    alpha: float = 1.2               # RobustPrune diversity (1.0 = off)
+    num_entry_points: int = 1        # multi-entry architecture (1..9)
+    adaptive_ef_coef: float = 0.0    # dynamic-EF scaling vs target recall
+    # -- search module (§6.2) --------------------------------------------
+    gather_width: int = 1            # g: beam entries expanded per step
+    patience: int = 0                # 0 = off; else early-termination rounds
+    # -- refinement module (§6.3) ----------------------------------------
+    quantized_prefilter: bool = False
+    rerank_factor: int = 2
+
+    def describe(self) -> str:
+        return (f"R={self.degree} efc={self.ef_construction} "
+                f"rounds={self.nn_descent_rounds} a={self.alpha} "
+                f"eps={self.num_entry_points} adEF={self.adaptive_ef_coef} "
+                f"g={self.gather_width} pat={self.patience} "
+                f"q8={int(self.quantized_prefilter)} rr={self.rerank_factor}")
+
+
+# the paper's baseline (GLASS defaults, §3.5): single entry point, fixed ef,
+# no batching/early-termination/quantization tricks.
+GLASS_BASELINE = VariantConfig(
+    degree=32, ef_construction=64, nn_descent_rounds=4, alpha=1.0,
+    num_entry_points=1, adaptive_ef_coef=0.0, gather_width=1,
+    patience=0, quantized_prefilter=False, rerank_factor=1)
+
+
+class Engine:
+    """build_index() / search() with a VariantConfig — the module interface
+    the paper's prompt template mandates (Table 1)."""
+
+    def __init__(self, variant: VariantConfig, metric: str = "l2",
+                 seed: int = 0):
+        self.variant = variant
+        self.metric = metric
+        self.seed = seed
+        self.index: GraphIndex | None = None
+
+    def build_index(self, base: np.ndarray) -> GraphIndex:
+        v = self.variant
+        self.index = construction.build_graph(
+            base, metric=self.metric, degree=v.degree,
+            ef_construction=v.ef_construction, rounds=v.nn_descent_rounds,
+            alpha=v.alpha, num_entry_points=v.num_entry_points,
+            quantize=v.quantized_prefilter, seed=self.seed)
+        return self.index
+
+    def effective_ef(self, ef: int, target_recall: float = 0.0) -> int:
+        """Paper §6.1: dynamic-EF scaling above a critical recall."""
+        v = self.variant
+        critical = 0.9
+        if v.adaptive_ef_coef > 0 and target_recall > critical:
+            excess = target_recall - critical
+            return int(ef * (1.0 + excess * v.adaptive_ef_coef))
+        return ef
+
+    def search(self, queries: np.ndarray | jax.Array, k: int, ef: int,
+               target_recall: float = 0.0):
+        assert self.index is not None, "build_index first"
+        v = self.variant
+        ids, dists, steps, exps = search_lib.search(
+            self.index, jnp.asarray(queries, jnp.float32),
+            ef=self.effective_ef(ef, target_recall), k=k,
+            gather_width=v.gather_width, patience=v.patience,
+            quantized=v.quantized_prefilter, rerank=v.rerank_factor)
+        return ids, dists
+
+    def with_variant(self, **overrides) -> "Engine":
+        eng = Engine(dataclasses.replace(self.variant, **overrides),
+                     self.metric, self.seed)
+        eng.index = self.index
+        return eng

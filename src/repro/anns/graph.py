@@ -1,0 +1,72 @@
+"""Flat fixed-degree graph index (GLASS layout, TPU-adapted).
+
+``neighbors`` is a dense (N, R) int32 array — contiguous HBM rows so a
+beam-expansion gather is one dense DMA per node (the TPU analogue of the
+paper's cache-line-friendly adjacency + software prefetch).  Slots beyond a
+node's true degree point back at the node itself (self-loops are harmless:
+already-visited dedup drops them).  Pre-computed degrees are the paper's
+"edge metadata" refinement (§6.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class GraphIndex:
+    neighbors: jax.Array          # (N, R) int32
+    entry_points: jax.Array       # (E,) int32 — medoid-spread entries
+    base: jax.Array               # (N, d) float32
+    degrees: jax.Array            # (N,) int32 — precomputed edge metadata
+    metric: str                   # "l2" | "ip"
+    base_q: Optional[jax.Array] = None    # (N, d) int8 quantized base
+    scales: Optional[jax.Array] = None    # (N,) fp32 dequant scales
+
+    @property
+    def n(self) -> int:
+        return int(self.base.shape[0])
+
+    @property
+    def degree(self) -> int:
+        return int(self.neighbors.shape[1])
+
+
+def select_entry_points(base: jax.Array, num: int, metric: str) -> jax.Array:
+    """Medoid + spread entries: the global medoid first, then greedy
+    farthest-point picks — the multi-entry-point architecture the paper's
+    RL discovered for graph construction/search (§6.1)."""
+    n, d = base.shape
+    centroid = jnp.mean(base, axis=0, keepdims=True)
+    d2c = jnp.sum((base - centroid) ** 2, axis=1)
+    first = jnp.argmin(d2c).astype(jnp.int32)
+    eps = [first]
+    if num > 1:
+        # greedy k-center over a fixed subsample for determinism + speed
+        stride = max(1, n // 4096)
+        cand = jnp.arange(0, n, stride, dtype=jnp.int32)
+        cvec = base[cand]
+        mind = jnp.sum((cvec - base[first][None, :]) ** 2, axis=1)
+        for _ in range(num - 1):
+            nxt = cand[jnp.argmax(mind)]
+            eps.append(nxt.astype(jnp.int32))
+            dn = jnp.sum((cvec - base[nxt][None, :]) ** 2, axis=1)
+            mind = jnp.minimum(mind, dn)
+    return jnp.stack(eps)
+
+
+def graph_stats(index: GraphIndex) -> dict:
+    nb = np.asarray(index.neighbors)
+    self_loops = (nb == np.arange(len(nb))[:, None]).sum(axis=1)
+    deg = nb.shape[1] - self_loops
+    return {
+        "n": index.n,
+        "degree_cap": index.degree,
+        "mean_degree": float(deg.mean()),
+        "min_degree": int(deg.min()),
+        "entry_points": int(index.entry_points.shape[0]),
+    }

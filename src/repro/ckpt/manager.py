@@ -1,0 +1,71 @@
+"""Checkpoint rotation + async writes + resume discovery."""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+
+from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    """keep_n rotation; saves run on a writer thread so the train loop is
+    not blocked on serialization (the device->host copy happens on the
+    caller thread to snapshot a consistent state)."""
+
+    def __init__(self, root: str, keep_n: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step}")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "manifest.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, tree, step: int, extra: dict | None = None):
+        import jax
+        host_tree = jax.device_get(tree)  # snapshot now, serialize later
+        self.wait()
+
+        def work():
+            save_checkpoint(self._path(step), host_tree, step, extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore(self, like_tree=None, step: int | None = None):
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None
+        return load_checkpoint(self._path(step), like_tree)
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(self._path(s), ignore_errors=True)

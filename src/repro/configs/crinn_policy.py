@@ -1,0 +1,27 @@
+"""The paper's own policy configuration — a compact decoder LM used for the
+end-to-end CRINN runs in this container (examples/train_crinn.py).
+
+The paper fine-tunes a pretrained code LLM; offline we train a ~100M policy
+from scratch over the structured variant grammar (DESIGN.md §2).  The vocab
+is the CRINN prompt/program token space (repro.core.prompting.VOCAB_SIZE
+padded).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="crinn-policy-100m",
+    family="dense",
+    source="this paper (§3) — policy backbone",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=512,
+    norm="rmsnorm",
+    act="silu",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    sub_quadratic=False,
+)

@@ -1,0 +1,25 @@
+"""InternVL2-26B — InternViT vision encoder + InternLM2-20B language backbone.
+
+[arXiv:2404.16821; hf].  Backbone only per assignment: the InternViT patch
+frontend is a stub; ``input_specs`` supplies precomputed patch embeddings
+interleaved with text token embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    source="arXiv:2404.16821; hf",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    norm="rmsnorm",
+    act="silu",
+    rope_theta=1000000.0,
+    frontend="vision_patches",
+    sub_quadratic=False,
+)

@@ -1,0 +1,28 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec audio tokens.
+
+[arXiv:2306.05284; hf].  Backbone only: the EnCodec frontend is a stub —
+``input_specs`` supplies precomputed frame embeddings (see launch/specs.py).
+MHA (kv == heads), LayerNorm, GELU-gated FFN, learned-free RoPE-less
+sinusoidal in the original; we use RoPE-free learned-equivalent (rope on,
+standard theta) noted in DESIGN.md.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    source="arXiv:2306.05284; hf",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    norm="layernorm",
+    act="gelu",
+    rope_theta=10000.0,
+    frontend="audio_frames",
+    sub_quadratic=False,
+    tie_embeddings=False,
+)

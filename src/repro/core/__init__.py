@@ -1,0 +1,22 @@
+"""CRINN core: contrastive reinforcement learning for ANNS optimization.
+
+- ``variant_space``   — the structured action grammar (paper's code space)
+- ``prompting``       — contrastive prompt construction (§3.2, Table 1)
+- ``exemplar_db``     — performance-indexed DB + eq.(1) softmax sampling
+- ``reward``          — recall-banded QPS-recall AUC speed reward (§3.3)
+- ``grpo``            — GRPO objective (§3.4, eqs. 2-3)
+- ``policy``          — grammar-constrained LM rollouts over any zoo arch
+- ``optimizer_loop``  — sequential module-by-module driver (§3.1/§3.5)
+"""
+from repro.core.exemplar_db import ExemplarDB
+from repro.core.grpo import GRPOConfig, group_advantages, grpo_loss
+from repro.core.optimizer_loop import CrinnOptimizer, LoopConfig
+from repro.core.policy import Policy
+from repro.core.reward import RewardResult, banded_auc, speed_reward
+from repro.core.variant_space import MODULE_ORDER, MODULES, Program
+
+__all__ = [
+    "ExemplarDB", "GRPOConfig", "group_advantages", "grpo_loss",
+    "CrinnOptimizer", "LoopConfig", "Policy", "RewardResult", "banded_auc",
+    "speed_reward", "MODULE_ORDER", "MODULES", "Program",
+]

@@ -1,0 +1,85 @@
+"""GRPO (paper §3.4, eqs. 2-3) in JAX.
+
+Group-relative advantages (eq. 2):  r_hat_i = (r_i - mean(r)) / std(r)
+Objective (eq. 3): per-token PPO-clip with importance ratio against the
+rollout policy, length-normalised per completion, minus a beta-weighted KL
+penalty against the reference policy (the k3 estimator, as in DeepSeekMath).
+
+The loss fn is pure and pjit-able: reference/rollout logps are inputs
+(computed during rollout), so one model forward per update step — this is
+the ``train_step`` the multi-pod dry-run lowers for every architecture.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.models.runtime import Runtime
+
+
+@dataclass(frozen=True)
+class GRPOConfig:
+    eps_clip: float = 0.2
+    beta: float = 0.04           # KL regularisation weight
+    aux_weight: float = 0.01     # MoE load-balance loss weight
+    group_size: int = 8
+
+
+def group_advantages(rewards: jax.Array) -> jax.Array:
+    """Eq. (2) over one prompt group. rewards: (G,) -> (G,)."""
+    mu = jnp.mean(rewards)
+    sd = jnp.std(rewards)
+    return (rewards - mu) / (sd + 1e-6)
+
+
+def grpo_loss(params, batch: dict, cfg: ModelConfig, rt: Runtime,
+              gcfg: GRPOConfig):
+    """batch:
+      tokens      (B, T) int32 — prompt + completion
+      mask        (B, T) fp32 — 1 on completion tokens (loss positions)
+      advantages  (B,)   fp32 — group-normalised rewards
+      old_logps   (B, T) fp32 — rollout policy per-token logp (0 off-mask)
+      ref_logps   (B, T) fp32 — reference policy per-token logp
+    Predictions at position t-1 score token t; inputs are aligned by the
+    caller (mask[t] refers to predicting tokens[t] from prefix t-1).
+    """
+    tokens = batch["tokens"]
+    fwd = {"embeds": batch["embeds"]} if "embeds" in batch else {"tokens": tokens}
+    hidden, aux = model_lib.forward_train(params, fwd, cfg, rt)
+    lp = model_lib.token_logprobs(params, hidden[:, :-1], tokens[:, 1:], cfg, rt)
+    mask = batch["mask"][:, 1:]
+    old = batch["old_logps"][:, 1:]
+    ref = batch["ref_logps"][:, 1:]
+    adv = batch["advantages"][:, None]
+
+    ratio = jnp.exp(lp - old)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - gcfg.eps_clip, 1.0 + gcfg.eps_clip) * adv
+    pg = jnp.minimum(unclipped, clipped)
+
+    # k3 KL estimator: exp(ref-lp) - (ref-lp) - 1  >= 0
+    dlr = ref - lp
+    kl = jnp.exp(dlr) - dlr - 1.0
+
+    per_tok = (pg - gcfg.beta * kl) * mask
+    denom = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    per_seq = jnp.sum(per_tok, axis=1) / denom
+    loss = -jnp.mean(per_seq) + gcfg.aux_weight * aux
+
+    metrics = {
+        "pg": jnp.mean(jnp.sum(pg * mask, axis=1) / denom),
+        "kl": jnp.mean(jnp.sum(kl * mask, axis=1) / denom),
+        "ratio_max": jnp.max(jnp.where(mask > 0, ratio, 1.0)),
+        "aux": aux,
+    }
+    return loss, metrics
+
+
+def grpo_loss_and_grad(params, batch, cfg, rt, gcfg):
+    return jax.value_and_grad(
+        lambda p: grpo_loss(p, batch, cfg, rt, gcfg), has_aux=True)(params)

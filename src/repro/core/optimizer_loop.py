@@ -1,0 +1,216 @@
+"""The sequential module-by-module CRINN driver (paper §3.1, §3.5, §5.3).
+
+For each module in (graph construction -> search -> refinement):
+  repeat for N iterations:
+    1. sample exemplars from the performance-indexed DB (eq. 1),
+    2. build the contrastive prompt,
+    3. sample a GRPO group of G programs from the policy,
+    4. evaluate each: decode -> VariantConfig -> build/search on the real
+       engine -> QPS-recall sweep -> banded-AUC reward (§3.3),
+    5. eq.(2) group advantages -> GRPO update of the policy,
+    6. insert successful programs into the DB.
+  The module's best program is frozen into the running variant before the
+  next module starts (the paper's progressive optimization, Table 4).
+
+Construction-variant indexes are cached by their construction knobs so RL
+revisits don't pay the rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.anns.bench import CurvePoint, measure_point
+from repro.anns.datasets import Dataset
+from repro.anns.engine import Engine, GLASS_BASELINE, VariantConfig
+from repro.core import prompting
+from repro.core.exemplar_db import ExemplarDB
+from repro.core.grpo import GRPOConfig, group_advantages, grpo_loss_and_grad
+from repro.core.policy import Policy, Rollout
+from repro.core.reward import RewardResult, speed_reward
+from repro.core.variant_space import (MODULE_ORDER, Program,
+                                      program_from_variant)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class LoopConfig:
+    k: int = 10
+    ef_sweep: tuple = (16, 24, 32, 48, 64, 96)
+    group_size: int = 6
+    iterations_per_module: int = 4
+    exemplars_per_prompt: int = 4
+    temperature: float = 1.0
+    tau: float = 0.25            # eq.(1) temperature
+    seed: int = 0
+    bench_repeats: int = 2
+
+
+@dataclass
+class IterationLog:
+    module: str
+    iteration: int
+    rewards: list
+    best_so_far: float
+    loss: float
+    kl: float
+
+
+class CrinnOptimizer:
+    """Couples the policy LM, the exemplar DB, and the ANNS engine."""
+
+    def __init__(self, policy: Policy, ds: Dataset, loop: LoopConfig,
+                 gcfg: GRPOConfig | None = None,
+                 opt_cfg: AdamWConfig | None = None):
+        self.policy = policy
+        self.ds = ds
+        self.loop = loop
+        self.gcfg = gcfg or GRPOConfig(group_size=loop.group_size)
+        self.opt_cfg = opt_cfg or AdamWConfig(lr=1e-4, weight_decay=0.0)
+        self.opt_state = adamw_init(policy.params, self.opt_cfg)
+        self.db = ExemplarDB(tau=loop.tau)
+        self.rng = np.random.default_rng(loop.seed)
+        self.key = jax.random.PRNGKey(loop.seed)
+        self._index_cache: dict[tuple, Engine] = {}
+        self.history: list[IterationLog] = []
+
+        # paper-faithful starting point: GLASS baseline, reward 1.0
+        self.current = GLASS_BASELINE
+        self.baseline_auc: float | None = None
+        self._jit_update = None
+
+    # ------------------------------------------------------------------
+    # Engine evaluation
+    # ------------------------------------------------------------------
+    def _construction_key(self, v: VariantConfig) -> tuple:
+        return (v.degree, v.ef_construction, v.nn_descent_rounds, v.alpha,
+                v.num_entry_points)
+
+    def _engine_for(self, v: VariantConfig) -> Engine:
+        key = self._construction_key(v)
+        eng = self._index_cache.get(key)
+        if eng is None:
+            eng = Engine(v, metric=self.ds.metric, seed=self.loop.seed)
+            eng.build_index(self.ds.base)
+            self._index_cache[key] = eng
+        if v.quantized_prefilter and eng.index.base_q is None:
+            from repro.kernels.qdist.ops import quantize_int8
+            bq, sc = quantize_int8(eng.index.base)
+            eng.index.base_q, eng.index.scales = bq, sc
+        e2 = Engine(v, metric=self.ds.metric, seed=self.loop.seed)
+        e2.index = eng.index
+        return e2
+
+    def curve(self, v: VariantConfig) -> list[CurvePoint]:
+        eng = self._engine_for(v)
+        pts = []
+        for ef in self.loop.ef_sweep:
+            tr = 0.95 if ef >= max(self.loop.ef_sweep) // 2 else 0.0
+            pts.append(measure_point(eng, self.ds, ef=ef, k=self.loop.k,
+                                     repeats=self.loop.bench_repeats,
+                                     target_recall=tr))
+        return pts
+
+    def evaluate(self, v: VariantConfig) -> RewardResult:
+        if self.baseline_auc is None:
+            base_pts = self.curve(GLASS_BASELINE)
+            r = speed_reward(base_pts, baseline_auc=1.0)
+            self.baseline_auc = max(r.auc, 1e-9)
+        pts = self.curve(v)
+        return speed_reward(pts, baseline_auc=self.baseline_auc)
+
+    # ------------------------------------------------------------------
+    # GRPO update
+    # ------------------------------------------------------------------
+    def _update_policy(self, rollouts: list[Rollout], rewards: np.ndarray):
+        adv = np.asarray(group_advantages(jax.numpy.asarray(rewards)))
+        T = max(len(r.tokens) for r in rollouts)
+        B = len(rollouts)
+        tokens = np.zeros((B, T), np.int32)
+        mask = np.zeros((B, T), np.float32)
+        old = np.zeros((B, T), np.float32)
+        for i, r in enumerate(rollouts):
+            tokens[i, : len(r.tokens)] = r.tokens
+            mask[i, : len(r.tokens)] = r.mask
+            old[i, : len(r.tokens)] = r.logps
+        # reference = rollout policy snapshot (single inner epoch => same)
+        ref = old.copy()
+        batch = {
+            "tokens": jax.numpy.asarray(tokens),
+            "mask": jax.numpy.asarray(mask),
+            "advantages": jax.numpy.asarray(adv, jax.numpy.float32),
+            "old_logps": jax.numpy.asarray(old),
+            "ref_logps": jax.numpy.asarray(ref),
+        }
+        if self._jit_update is None:
+            cfg, rt, gcfg, ocfg = (self.policy.cfg, self.policy.rt,
+                                   self.gcfg, self.opt_cfg)
+
+            @jax.jit
+            def step(params, opt_state, batch):
+                (loss, metrics), grads = grpo_loss_and_grad(
+                    params, batch, cfg, rt, gcfg)
+                params, opt_state, om = adamw_update(
+                    params, grads, opt_state, ocfg)
+                return params, opt_state, loss, metrics
+
+            self._jit_update = step
+        self.policy.params, self.opt_state, loss, metrics = self._jit_update(
+            self.policy.params, self.opt_state, batch)
+        return float(loss), float(metrics["kl"])
+
+    # ------------------------------------------------------------------
+    # Module loop
+    # ------------------------------------------------------------------
+    def run_module(self, module: str, verbose: bool = True) -> VariantConfig:
+        # seed the DB with the inherited implementation (score vs baseline)
+        seed_prog = program_from_variant(module, self.current)
+        seed_r = self.evaluate(self.current)
+        self.db.add(seed_prog, seed_r.reward)
+        best_prog, best_reward = seed_prog, seed_r.reward
+
+        for it in range(self.loop.iterations_per_module):
+            exemplars = self.db.sample(module, self.loop.exemplars_per_prompt,
+                                       self.rng)
+            prompt = prompting.build_prompt(module, exemplars)
+            self.key, sub = jax.random.split(self.key)
+            rollouts = self.policy.sample_group(
+                module, prompt, self.loop.group_size, sub,
+                temperature=self.loop.temperature)
+
+            rewards = []
+            for ro in rollouts:
+                if ro.program is None:
+                    rewards.append(0.0)   # malformed => score 0 (paper)
+                    continue
+                cand = ro.program.apply_to(self.current)
+                res = self.evaluate(cand)
+                rewards.append(res.reward)
+                self.db.add(ro.program, res.reward, step=it)
+                if res.reward > best_reward:
+                    best_reward, best_prog = res.reward, ro.program
+            rewards = np.asarray(rewards, np.float32)
+
+            loss, kl = self._update_policy(rollouts, rewards)
+            self.history.append(IterationLog(
+                module=module, iteration=it, rewards=rewards.tolist(),
+                best_so_far=best_reward, loss=loss, kl=kl))
+            if verbose:
+                print(f"[{module}] it={it} rewards={np.round(rewards,3)} "
+                      f"best={best_reward:.3f} loss={loss:.4f} kl={kl:.4f}")
+
+        self.current = best_prog.apply_to(self.current)
+        return self.current
+
+    def run(self, verbose: bool = True) -> VariantConfig:
+        for module in MODULE_ORDER:
+            t0 = time.time()
+            self.run_module(module, verbose=verbose)
+            if verbose:
+                print(f"== module {module} done in {time.time()-t0:.0f}s; "
+                      f"variant now: {self.current.describe()}")
+        return self.current

@@ -1,0 +1,106 @@
+"""Policy wrapper: grammar-constrained sampling of variant programs from any
+LM in the zoo, with per-token logps recorded for GRPO.
+
+Completions are fixed-length (= knob count of the module), so a rollout is
+``prefill(prompt) + knob_count decode steps`` — no stop-token handling.
+Grammar masking restricts each step's softmax to that knob's valid tokens
+(the paper enforces its interface contract in natural language and gives
+score 0 on violations; a structured grammar enforces the same contract
+mechanically, and reward-0 handling still exists for robustness).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import prompting
+from repro.core.variant_space import Program, knob_count
+from repro.models import model as model_lib
+from repro.models.runtime import Runtime
+
+
+@dataclass
+class Rollout:
+    tokens: np.ndarray        # (T,) prompt + completion
+    mask: np.ndarray          # (T,) 1.0 on completion positions
+    logps: np.ndarray         # (T,) rollout-policy logp of each token (0 off-mask)
+    program: Program | None
+
+
+class Policy:
+    def __init__(self, cfg: ModelConfig, params, rt: Runtime):
+        assert cfg.padded_vocab >= prompting.VOCAB_SIZE, (
+            cfg.padded_vocab, prompting.VOCAB_SIZE)
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt
+
+    def _masked_sample(self, logits: jax.Array, mask: np.ndarray,
+                       key, temperature: float):
+        """Sample from the grammar-masked distribution but record the
+        *full-vocab* logp: the mask is part of the sampler (environment),
+        not the policy measure, so rollout logps stay consistent with the
+        full-softmax logps the GRPO loss recomputes."""
+        neg = jnp.asarray(-1e30, logits.dtype)
+        vl = jnp.where(jnp.asarray(mask)[None, :logits.shape[-1]], logits, neg)
+        if temperature <= 0:
+            tok = jnp.argmax(vl, axis=-1)
+        else:
+            tok = jax.random.categorical(key, vl / temperature, axis=-1)
+        lse_full = jax.nn.log_softmax(logits, axis=-1)
+        lp = jnp.take_along_axis(lse_full, tok[:, None], axis=-1)[:, 0]
+        return tok.astype(jnp.int32), lp
+
+    def sample_group(self, module: str, prompt: list[int], g: int, key,
+                     temperature: float = 1.0) -> list[Rollout]:
+        """Sample G completions for one prompt (one GRPO group)."""
+        cfg, rt, params = self.cfg, self.rt, self.params
+        n_steps = knob_count(module)
+        T = len(prompt)
+        toks = jnp.asarray(prompt, jnp.int32)[None, :].repeat(g, axis=0)
+
+        caches = model_lib.init_cache(cfg, g, T + n_steps + 1)
+        logits, caches, clen = model_lib.prefill(
+            params, {"tokens": toks}, cfg, rt, caches)
+
+        out_toks, out_lps = [], []
+        vmask_full = np.zeros(cfg.padded_vocab, bool)
+        for step in range(n_steps):
+            vmask = prompting.valid_token_mask(module, step)
+            vmask_full[:] = False
+            vmask_full[: len(vmask)] = vmask
+            key, sub = jax.random.split(key)
+            tok, lp = self._masked_sample(
+                logits.astype(jnp.float32), vmask_full, sub, temperature)
+            out_toks.append(tok)
+            out_lps.append(lp)
+            logits, caches, clen = model_lib.decode_step(
+                params, {"tokens": tok[:, None]}, cfg, rt, caches, clen)
+
+        comp = np.stack([np.asarray(t) for t in out_toks], axis=1)  # (g, n)
+        lps = np.stack([np.asarray(l) for l in out_lps], axis=1)
+
+        rollouts = []
+        for i in range(g):
+            tokens = np.concatenate([np.asarray(prompt, np.int32), comp[i]])
+            mask = np.concatenate([np.zeros(T, np.float32),
+                                   np.ones(n_steps, np.float32)])
+            logps = np.concatenate([np.zeros(T, np.float32), lps[i]])
+            prog = prompting.decode_program(module, comp[i].tolist())
+            rollouts.append(Rollout(tokens, mask, logps, prog))
+        return rollouts
+
+    def batch_logps(self, tokens: np.ndarray) -> np.ndarray:
+        """Per-token logps under current params (for ref-policy snapshots).
+        tokens: (B, T) -> (B, T) with position 0 = 0."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        hidden, _ = model_lib.forward_train(
+            self.params, {"tokens": toks}, self.cfg, self.rt)
+        lp = model_lib.token_logprobs(
+            self.params, hidden[:, :-1], toks[:, 1:], self.cfg, self.rt)
+        return np.concatenate(
+            [np.zeros((toks.shape[0], 1), np.float32), np.asarray(lp)], axis=1)

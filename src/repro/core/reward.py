@@ -1,0 +1,87 @@
+"""The speed reward (paper §3.3): recall-banded QPS-recall AUC.
+
+Given a module implementation we sweep ``ef``, collect (QPS, recall)
+points, keep the recall band [0.85, 0.95], and integrate QPS over recall —
+one scalar that is fair across implementations whose discrete ef grids land
+on different (QPS, recall) combinations.  Band edges are linearly
+interpolated from the neighboring points so sparse grids still produce a
+stable area (the instability the paper calls out for >0.95 is exactly why
+the band exists).
+
+Scores are normalised relative to a fixed baseline AUC and smoothed with a
+bounded monotone transform (following the stability smoothing of [18]):
+    smooth(r) = 2r / (1 + r)
+which caps outlier speedups at 2.0 and keeps gradients informative near 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+RECALL_LO = 0.85
+RECALL_HI = 0.95
+
+
+@dataclass(frozen=True)
+class RewardResult:
+    auc: float            # raw banded AUC (QPS x recall units)
+    rel: float            # auc / baseline_auc
+    reward: float         # smoothed scalar handed to GRPO + the DB
+    n_band_points: int
+    valid: bool
+
+
+def _interp_curve(recalls: np.ndarray, qps: np.ndarray,
+                  lo: float, hi: float) -> tuple[np.ndarray, np.ndarray]:
+    """Clip the piecewise-linear QPS(recall) curve to [lo, hi]."""
+    order = np.argsort(recalls)
+    r, q = recalls[order], qps[order]
+    # deduplicate equal recalls keeping max QPS (pareto)
+    uniq_r, uniq_q = [], []
+    for ri, qi in zip(r, q):
+        if uniq_r and ri == uniq_r[-1]:
+            uniq_q[-1] = max(uniq_q[-1], qi)
+        else:
+            uniq_r.append(ri)
+            uniq_q.append(qi)
+    r, q = np.array(uniq_r), np.array(uniq_q)
+    if len(r) < 2 or r[-1] < lo or r[0] > hi:
+        return np.array([]), np.array([])
+    grid = [lo] + [ri for ri in r if lo < ri < hi] + [hi]
+    grid = np.array(sorted(set(grid)))
+    # clamp the grid to the observed recall range (no extrapolation)
+    grid = grid[(grid >= r[0]) & (grid <= r[-1])]
+    if len(grid) < 2:
+        return np.array([]), np.array([])
+    qg = np.interp(grid, r, q)
+    return grid, qg
+
+
+def banded_auc(recalls: np.ndarray, qps: np.ndarray,
+               lo: float = RECALL_LO, hi: float = RECALL_HI) -> tuple[float, int]:
+    grid, qg = _interp_curve(np.asarray(recalls, float), np.asarray(qps, float),
+                             lo, hi)
+    if len(grid) < 2:
+        return 0.0, 0
+    auc = float(np.trapezoid(qg, grid))
+    inside = int(np.sum((recalls >= lo) & (recalls <= hi)))
+    return auc, inside
+
+
+def smooth(rel: float) -> float:
+    return 2.0 * rel / (1.0 + rel) if rel > 0 else 0.0
+
+
+def speed_reward(points, baseline_auc: float,
+                 lo: float = RECALL_LO, hi: float = RECALL_HI) -> RewardResult:
+    """points: list of objects with .recall and .qps (bench CurvePoints)."""
+    recalls = np.array([p.recall for p in points], float)
+    qps = np.array([p.qps for p in points], float)
+    auc, n_in = banded_auc(recalls, qps, lo, hi)
+    if auc <= 0.0 or baseline_auc <= 0.0:
+        return RewardResult(auc=auc, rel=0.0, reward=0.0,
+                            n_band_points=n_in, valid=False)
+    rel = auc / baseline_auc
+    return RewardResult(auc=auc, rel=rel, reward=smooth(rel),
+                        n_band_points=n_in, valid=True)

@@ -1,0 +1,86 @@
+"""The structured variant grammar — CRINN's action space on TPU.
+
+The paper's policy emits free-form C++; offline we cannot run a pretrained
+code LLM, so the policy emits token sequences over this grammar instead
+(DESIGN.md §2).  The knobs are exactly the optimization dimensions the
+paper's RL discovered (§6): adaptive-EF scaling, prefetch-depth analogue
+(gather width), multi-entry points, early termination, quantized rerank,
+construction breadth/diversity.
+
+Each knob is a categorical choice; a module's "code" is the tuple of its
+knob choices.  Token layout (see ``repro.core.prompting`` for the full
+vocab): every (knob, choice) pair owns one token, so decoding is exact and
+malformed programs are detectable (reward 0, per the paper's "failure to
+maintain accuracy/interface => score 0" rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+
+from repro.anns.engine import VariantConfig
+
+# module name -> ordered list of (knob, choices)
+MODULES: dict[str, list[tuple[str, tuple]]] = {
+    "graph_construction": [
+        ("degree", (16, 24, 32, 48, 64)),
+        ("ef_construction", (32, 48, 64, 96, 128, 192)),
+        ("nn_descent_rounds", (2, 3, 4, 6)),
+        ("alpha", (1.0, 1.1, 1.2, 1.3)),
+        ("num_entry_points", (1, 2, 3, 5, 7, 9)),
+        ("adaptive_ef_coef", (0.0, 4.0, 8.0, 14.5, 20.0)),
+    ],
+    "search": [
+        ("gather_width", (1, 2, 4)),
+        ("patience", (0, 2, 4, 8)),
+    ],
+    "refinement": [
+        ("quantized_prefilter", (False, True)),
+        ("rerank_factor", (1, 2, 4, 8)),
+    ],
+}
+
+MODULE_ORDER = ("graph_construction", "search", "refinement")
+
+
+def knob_count(module: str) -> int:
+    return len(MODULES[module])
+
+
+def program_space_size(module: str) -> int:
+    n = 1
+    for _, choices in MODULES[module]:
+        n *= len(choices)
+    return n
+
+
+@dataclass(frozen=True)
+class Program:
+    """A decoded module implementation: choice index per knob."""
+    module: str
+    choices: tuple[int, ...]
+
+    def knobs(self) -> dict:
+        out = {}
+        for (name, vals), c in zip(MODULES[self.module], self.choices):
+            out[name] = vals[c]
+        return out
+
+    def apply_to(self, variant: VariantConfig) -> VariantConfig:
+        return dataclasses.replace(variant, **self.knobs())
+
+
+def program_from_variant(module: str, variant: VariantConfig) -> Program:
+    """Inverse mapping (used to seed the DB with the GLASS baseline)."""
+    choices = []
+    for name, vals in MODULES[module]:
+        v = getattr(variant, name)
+        choices.append(vals.index(v))
+    return Program(module, tuple(choices))
+
+
+def all_programs(module: str):
+    ranges = [range(len(ch)) for _, ch in MODULES[module]]
+    for combo in itertools.product(*ranges):
+        yield Program(module, combo)

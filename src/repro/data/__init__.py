@@ -1,0 +1,4 @@
+from repro.data.tokens import TokenPipeline
+from repro.data.prompts import PromptPipeline
+
+__all__ = ["TokenPipeline", "PromptPipeline"]

@@ -1,0 +1,47 @@
+"""Public flash-attention op: (B,S,Hq,D)-layout wrapper with GQA folding,
+head-dim padding (h2o-danube's 80, musicgen's 64), and interpret dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, round_up
+from repro.kernels.flash.flash import flash_attention as _flash_kernel
+from repro.kernels.flash.ref import flash_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "q_scale", "window", "softcap", "use_kernel"))
+def causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    q_scale: float, window: int = 0, softcap: float = 0.0,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """(B,S,Hq,D) x (B,S,Hk,D)^2 -> (B,S,Hq,D), causal (+ window/softcap)."""
+    if use_kernel is None:
+        use_kernel = True
+    if not use_kernel:
+        return flash_ref(q, k, v, q_scale=q_scale, window=window, softcap=softcap)
+
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    Dp = max(128, round_up(D, 128))
+    if Dp != D:
+        padw = [(0, 0)] * 3 + [(0, Dp - D)]
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    # (B,S,Hq,D) -> (B*Hk, S, G, D); kv -> (B*Hk, S, D)
+    qr = q.reshape(B, S, Hk, G, Dp).transpose(0, 2, 1, 3, 4).reshape(B * Hk, S, G, Dp)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hk, S, Dp)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hk, S, Dp)
+    bq = min(128, S)
+    bk = min(128, S)
+    o = _flash_kernel(qr, kr, vr, q_scale=q_scale, window=window,
+                      softcap=softcap, bq=bq, bk=bk,
+                      interpret=interpret_default())
+    o = o.reshape(B, Hk, S, G, Dp).transpose(0, 2, 1, 3, 4).reshape(B, S, Hq, Dp)
+    return o[..., :D]

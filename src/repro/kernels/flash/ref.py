@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for causal (optionally windowed, soft-capped) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_ref(q, k, v, *, q_scale: float, window: int = 0,
+              softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B, S, Hq, D); k/v: (B, S, Hk, D) -> (B, S, Hq, D).
+
+    Full-precision naive attention; GQA by head-group broadcast.
+    """
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    qf = q.astype(jnp.float32).reshape(B, S, Hk, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * q_scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, S, Hq, D).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""Public quantize / quantized-distance ops."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, pad_dim, round_up
+from repro.kernels.qdist.qdist import qdist as _qdist_kernel
+from repro.kernels.qdist.ref import qdist_ref, quantize_ref
+
+
+@jax.jit
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-vector int8 quantization: x ~= q * scale."""
+    return quantize_ref(x)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "use_kernel"))
+def quantized_distance(
+    q: jax.Array, xq: jax.Array, scale: jax.Array, *,
+    metric: str = "l2", use_kernel: bool | None = None,
+) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = True
+    if not use_kernel:
+        return qdist_ref(q, xq, scale, metric)
+    nq, d = q.shape
+    nx, _ = xq.shape
+    bq = 128 if nq >= 128 else max(8, round_up(nq, 8))
+    bx = 128
+    bd = 128 if d >= 128 else round_up(d, 128)
+    qp = pad_dim(q, 0, round_up(nq, bq))
+    qp = pad_dim(qp, 1, round_up(d, bd))
+    xp = pad_dim(xq, 0, round_up(nx, bx))
+    xp = pad_dim(xp, 1, round_up(d, bd))
+    sp = pad_dim(scale, 0, round_up(nx, bx), value=1.0)
+    out = _qdist_kernel(qp, xp, sp, metric=metric, bq=bq, bx=bx, bd=bd,
+                        interpret=interpret_default())
+    return out[:nq, :nx]

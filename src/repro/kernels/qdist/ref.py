@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for int8 quantized asymmetric distance (refinement)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-vector int8 quantization: x ~= q * scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def qdist_ref(q: jnp.ndarray, xq: jnp.ndarray, scale: jnp.ndarray,
+              metric: str = "l2") -> jnp.ndarray:
+    """Asymmetric distance: fp query vs int8 base vectors.
+
+    q: (nq, d) fp; xq: (nx, d) int8; scale: (nx,) -> (nq, nx) fp32.
+    """
+    qf = q.astype(jnp.float32)
+    xf = xq.astype(jnp.float32) * scale[:, None]
+    dots = qf @ xf.T
+    if metric == "ip":
+        return -dots
+    qn = jnp.sum(qf * qf, axis=1, keepdims=True)
+    xn = jnp.sum(xf * xf, axis=1, keepdims=True)
+    return qn + xn.T - 2.0 * dots

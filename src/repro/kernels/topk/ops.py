@@ -1,0 +1,28 @@
+"""Public k-smallest op with padding + interpret dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, pad_dim, round_up
+from repro.kernels.topk.ref import topk_smallest_ref
+from repro.kernels.topk.topk import BIG, topk_smallest as _topk_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def topk_smallest(
+    d: jax.Array, k: int, *, use_kernel: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(nq, nx) -> ascending (values (nq,k) fp32, indices (nq,k) int32)."""
+    if use_kernel is None:
+        use_kernel = True
+    if not use_kernel:
+        return topk_smallest_ref(d, k)
+    nq, nx = d.shape
+    bq = 8 if nq >= 8 else nq
+    dp = pad_dim(d.astype(jnp.float32), 0, round_up(nq, bq), value=float(BIG))
+    dp = pad_dim(dp, 1, round_up(max(nx, k), 128), value=float(BIG))
+    vals, idx = _topk_kernel(dp, k, bq=bq, interpret=interpret_default())
+    return vals[:nq], idx[:nq]

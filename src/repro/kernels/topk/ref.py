@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for k-smallest selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_smallest_ref(d: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """d: (nq, nx) -> (values (nq,k), indices (nq,k)), ascending."""
+    vals, idx = jax.lax.top_k(-d.astype(jnp.float32), k)
+    return -vals, idx.astype(jnp.int32)

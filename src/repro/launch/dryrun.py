@@ -1,0 +1,416 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production mesh, record memory/cost/collective analysis.
+
+MUST be run as its own process (the two lines above execute before any
+other import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+
+Each cell is lowered against ShapeDtypeStructs (no allocation), compiled
+for the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh, and the
+artifacts (bytes-per-device, FLOPs, collective schedule) are appended as
+one json per cell so interrupted sweeps resume for free.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, dryrun_cells
+from repro.core.grpo import GRPOConfig, grpo_loss
+from repro.dist.hlo import collective_bytes
+from repro.dist.sharding import param_shardings, zero_shardings
+from repro.launch.mesh import make_production_mesh, make_tuned_mesh
+from repro.launch.specs import decode_specs, prefill_specs, train_specs
+from repro.models import model as model_lib
+from repro.models.runtime import Runtime
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def _runtime(mesh, cfg, shape, overrides: dict | None = None) -> Runtime:
+    kw = dict(mesh=mesh, attn_impl="masked", attn_chunk=512,
+              remat="block", logit_chunk=512, mamba_chunk=512)
+    if overrides:
+        kw.update(overrides)
+    return Runtime(**kw)
+
+
+def _param_state_shardings(cfg, mesh, with_opt: bool, fsdp: bool = False,
+                           quant_opt: bool = False):
+    pshape = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    pshard = param_shardings(pshape, mesh, fsdp=fsdp)
+    if not with_opt:
+        return pshape, pshard, None, None
+    ocfg = AdamWConfig(quant_state=quant_opt)
+    oshape = jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshape), ocfg))
+    zshard = zero_shardings(pshard, pshape, mesh)
+    if quant_opt:
+        # q keeps the param's shape (padded last dim) -> inherit the
+        # ZeRO-sharded spec per dim, dropping axes that no longer divide
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def qshard_for(zsh, leaf):
+            spec = list(zsh.spec) + [None] * (len(leaf.shape) - len(zsh.spec))
+            spec = spec[: len(leaf.shape)]
+            out = []
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is None:
+                    out.append(None)
+                    continue
+                size = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    size *= mesh.shape[a]
+                out.append(ax if dim % size == 0 else None)
+            return NamedSharding(mesh, P(*out))
+
+        def one_state(zsh, st):
+            return {k: qshard_for(zsh, v) for k, v in st.items()}
+
+        mshard = jax.tree.map(one_state, zshard, oshape["m"],
+                              is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+        vshard = jax.tree.map(one_state, zshard, oshape["v"],
+                              is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+        oshard = {
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            "m": mshard, "v": vshard, "master": zshard,
+        }
+    else:
+        oshard = {
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            "m": zshard, "v": zshard, "master": zshard,
+        }
+    return pshape, pshard, oshape, oshard
+
+
+def _lower_one(arch: str, shape_name: str, *, multi_pod: bool,
+               rt_overrides: dict | None = None, fsdp: bool = False,
+               microbatch: int = 1, num_layers: int | None = None,
+               tp: int = 16, quant_opt: bool = False):
+    """Lower + compile one pass; returns (compiled, mesh, t_lower, t_compile)."""
+    cfg = get_config(arch)
+    if num_layers is not None:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers)
+    shape = SHAPES[shape_name]
+    if tp != 16:
+        mesh = make_tuned_mesh(tp, multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rt = _runtime(mesh, cfg, shape, rt_overrides)
+    gcfg = GRPOConfig()
+    ocfg = AdamWConfig(quant_state=quant_opt)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            specs, shardings = train_specs(cfg, shape, mesh)
+            pshape, pshard, oshape, oshard = _param_state_shardings(
+                cfg, mesh, with_opt=True, fsdp=fsdp, quant_opt=quant_opt)
+
+            def train_step(params, opt_state, batch):
+                def loss_fn(p, b):
+                    return grpo_loss(p, b, cfg, rt, gcfg)
+                if microbatch > 1:
+                    # gradient accumulation over sequential microbatches:
+                    # divides live activation memory by `microbatch`
+                    def split(v):
+                        return v.reshape((microbatch,
+                                          v.shape[0] // microbatch)
+                                         + v.shape[1:])
+                    mb = jax.tree.map(split, batch)
+
+                    def acc_body(carry, b):
+                        g_acc, l_acc = carry
+                        (loss, _), grads = jax.value_and_grad(
+                            loss_fn, has_aux=True)(params, b)
+                        return (jax.tree.map(jnp.add, g_acc, grads),
+                                l_acc + loss), None
+
+                    g0 = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    (grads, loss), _ = jax.lax.scan(
+                        acc_body, (g0, jnp.zeros(())), mb)
+                    grads = jax.tree.map(lambda g: g / microbatch, grads)
+                    loss = loss / microbatch
+                else:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, batch)
+                params, opt_state, om = adamw_update(
+                    params, grads, opt_state, ocfg)
+                return params, opt_state, loss
+
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(pshard, oshard, shardings),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            ).lower(pshape, oshape, specs)
+
+        elif shape.kind == "prefill":
+            (x_spec, cache_spec), (x_shard, cache_shard) = prefill_specs(
+                cfg, shape, mesh)
+            pshape, pshard, _, _ = _param_state_shardings(cfg, mesh, False, fsdp=fsdp)
+
+            def serve_prefill(params, batch, caches):
+                return model_lib.prefill(params, batch, cfg, rt, caches)
+
+            lowered = jax.jit(
+                serve_prefill,
+                in_shardings=(pshard, x_shard, cache_shard),
+                out_shardings=(None, cache_shard, None),
+                donate_argnums=(2,),
+            ).lower(pshape, x_spec, cache_spec)
+
+        else:  # decode
+            (x_spec, cache_spec, clen_spec), (x_shard, cache_shard, clen_shard) = \
+                decode_specs(cfg, shape, mesh)
+            pshape, pshard, _, _ = _param_state_shardings(cfg, mesh, False, fsdp=fsdp)
+
+            def serve_step(params, batch, caches, cache_len):
+                return model_lib.decode_step(
+                    params, batch, cfg, rt, caches, cache_len)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(pshard, x_shard, cache_shard, clen_shard),
+                out_shardings=(None, cache_shard, clen_shard),
+                donate_argnums=(2,),
+            ).lower(pshape, x_spec, cache_spec, clen_spec)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, mesh, t_lower, t_compile
+
+
+# costing pass: XLA cost_analysis counts scan bodies ONCE — unroll the
+# layer/CE/attention-pair scans so FLOPs and collective bytes are
+# trip-count-correct.  attn_chunk=4096 keeps the unrolled pair count sane
+# (1 block at train_4k, 64 at prefill_32k); rwkv's per-step time scan stays
+# scanned (its wkv FLOPs are ~2% of the projections — noted in
+# EXPERIMENTS.md §Roofline).
+COSTING_OVERRIDES = {"unroll_layers": True, "attn_chunk": 4096,
+                     "mamba_chunk": 1 << 20}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rt_overrides: dict | None = None, fsdp: bool = False,
+               microbatch: int = 1, tp: int = 16, quant_opt: bool = False):
+    """Returns the artifact dict for one cell (exec pass memory analysis +
+    unrolled costing pass FLOP/collective analysis)."""
+    compiled, mesh, t_lower, t_compile = _lower_one(
+        arch, shape_name, multi_pod=multi_pod, rt_overrides=rt_overrides,
+        fsdp=fsdp, microbatch=microbatch, tp=tp, quant_opt=quant_opt)
+    mem = compiled.memory_analysis()
+
+    if multi_pod:
+        # multi-pod pass proves the "pod" axis shards/compiles; the
+        # roofline table (§Roofline) is single-pod only — skip the
+        # costing compiles.
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        t_compile_c = 0.0
+        flops = float(cost.get("flops", -1)) if cost else None
+        bytes_acc = float(cost.get("bytes accessed", -1)) if cost else None
+        attn_adj = None
+    else:
+        # Costing: XLA counts scan bodies once, so per-period cost is
+        # measured by differencing two shallow unrolled compiles (depth =
+        # prefix + 1 period and prefix + 2 periods) and extrapolating
+        # linearly to the full depth — exact for FLOPs/collectives since
+        # periods are identical, and orders faster than unrolling 48 layers.
+        cfg = get_config(arch)
+        period = len(cfg.layer_pattern())
+        P = cfg.num_periods()
+        base = cfg.first_k_dense
+        cost_overrides = {**(rt_overrides or {}), **COSTING_OVERRIDES}
+        # microbatch splits are a wash for totals; cost with microbatch=1
+        c = []
+        t_compile_c = 0.0
+        for depth_periods in (1, 2):
+            compiled_c, _, _, tc = _lower_one(
+                arch, shape_name, multi_pod=multi_pod,
+                rt_overrides=cost_overrides, fsdp=fsdp, microbatch=1,
+                num_layers=base + depth_periods * period, tp=tp)
+            t_compile_c += tc
+            ca = compiled_c.cost_analysis()
+            co = collective_bytes(compiled_c.as_text())
+            c.append({
+                "flops": float(ca.get("flops", 0)),
+                "bytes": float(ca.get("bytes accessed", 0)),
+                "coll": co,
+            })
+
+        def _extrap(v1, v2):
+            return v1 + (P - 1) * (v2 - v1)
+
+        flops = _extrap(c[0]["flops"], c[1]["flops"])
+        bytes_acc = _extrap(c[0]["bytes"], c[1]["bytes"])
+
+        # Flash-adjusted memory: XLA-CPU materializes the (Cq, Ck) score
+        # blocks that the Pallas flash kernel streams through VMEM.  Measure
+        # the attention-core contribution exactly (identity-core diff) and
+        # replace it with the kernel's HBM traffic model:
+        #   fwd reads q,k,v + writes o;  train adds ~2.5x for bwd.
+        attn_adj = None
+        has_attn = any(s.kind == "attention" for s in cfg.block_specs())
+        if has_attn and SHAPES[shape_name].kind in ("train", "prefill"):
+            ci = []
+            for depth_periods in (1, 2):
+                comp_i, _, _, tci = _lower_one(
+                    arch, shape_name, multi_pod=multi_pod,
+                    rt_overrides={**cost_overrides,
+                                  "attn_core_identity": True},
+                    fsdp=fsdp, microbatch=1,
+                    num_layers=base + depth_periods * period, tp=tp)
+                t_compile_c += tci
+                ci.append(float(comp_i.cost_analysis().get("bytes accessed", 0)))
+            bytes_noattn = _extrap(ci[0], ci[1])
+            core_bytes_measured = max(bytes_acc - bytes_noattn, 0.0)
+            # flash traffic model, per device
+            sh = SHAPES[shape_name]
+            n_dev = mesh.devices.size
+            qkv_o = (2 * cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+            n_attn = sum(s.kind == "attention" for s in cfg.block_specs())
+            fwd_bytes = (sh.global_batch * sh.seq_len * qkv_o * 2  # bf16
+                         * n_attn / n_dev)
+            factor = 3.5 if shape_name.startswith("train") else 1.0
+            flash_bytes = fwd_bytes * factor
+            attn_adj = {
+                "bytes_noattn": bytes_noattn,
+                "core_bytes_measured": core_bytes_measured,
+                "flash_core_bytes": flash_bytes,
+                "bytes_flash_adjusted": bytes_noattn + flash_bytes,
+            }
+        coll = {}
+        kinds = set(c[0]["coll"]) | set(c[1]["coll"])
+        kinds.discard("total_bytes")
+        for k in kinds:
+            b1 = c[0]["coll"].get(k, {}).get("bytes", 0)
+            b2 = c[1]["coll"].get(k, {}).get("bytes", 0)
+            n1 = c[0]["coll"].get(k, {}).get("count", 0)
+            n2 = c[1]["coll"].get(k, {}).get("count", 0)
+            coll[k] = {"bytes": int(_extrap(b1, b2)),
+                       "count": int(_extrap(n1, n2))}
+        coll["total_bytes"] = sum(v["bytes"] for v in coll.values())
+        cost = None
+
+    def _mem_field(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    art = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "num_devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "compile_costing_s": round(t_compile_c, 1),
+        "flops": flops,
+        "bytes_accessed": bytes_acc,
+        "attn_adjustment": attn_adj,
+        "memory": {
+            "argument_bytes": _mem_field("argument_size_in_bytes"),
+            "output_bytes": _mem_field("output_size_in_bytes"),
+            "temp_bytes": _mem_field("temp_size_in_bytes"),
+            "generated_code_bytes": _mem_field("generated_code_size_in_bytes"),
+        },
+        "collectives": coll,
+        "params": get_config(arch).param_count(),
+        "active_params": get_config(arch).active_param_count(),
+        "runtime_overrides": rt_overrides or {},
+    }
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="compile the 2x16x16 mesh (default: single pod)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true", default=True)
+    ap.add_argument("--attn-impl", type=str, default=None,
+                    help="override Runtime.attn_impl (perf iterations)")
+    ap.add_argument("--scan-groups", type=int, default=0,
+                    help="two-level sqrt-memory remat (perf iterations)")
+    ap.add_argument("--seq-decode", action="store_true",
+                    help="flash-decode seq-parallel combine (perf iterations)")
+    ap.add_argument("--capacity", type=float, default=0.0,
+                    help="MoE capacity factor override (perf iterations)")
+    ap.add_argument("--quant-opt", action="store_true",
+                    help="int8 blockwise optimizer states (perf iterations)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="FSDP param sharding over DP axes")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--tp", type=int, default=16,
+                    help="TP degree on the same grid (perf iterations)")
+    ap.add_argument("--tag", type=str, default="",
+                    help="artifact filename suffix (perf iterations)")
+    args = ap.parse_args()
+
+    cells = dryrun_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    rt_overrides = {}
+    if args.attn_impl:
+        rt_overrides["attn_impl"] = args.attn_impl
+    if args.scan_groups:
+        rt_overrides["scan_groups"] = args.scan_groups
+    if args.seq_decode:
+        rt_overrides["seq_shard_decode"] = True
+    if args.capacity:
+        rt_overrides["capacity_factor"] = args.capacity
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tag = ("mp" if mp else "sp") + (f"_{args.tag}" if args.tag else "")
+            fname = os.path.join(args.out, f"{arch}__{shape_name}__{tag}.json")
+            if args.skip_existing and os.path.exists(fname):
+                print(f"skip {fname}")
+                continue
+            print(f"=== {arch} x {shape_name} ({'multi' if mp else 'single'}-pod)",
+                  flush=True)
+            try:
+                art = lower_cell(arch, shape_name, multi_pod=mp,
+                                 rt_overrides=rt_overrides or None,
+                                 fsdp=args.fsdp, microbatch=args.microbatch,
+                                 tp=args.tp, quant_opt=args.quant_opt)
+                art["fsdp"] = args.fsdp
+                art["microbatch"] = args.microbatch
+                art["tp"] = args.tp
+                with open(fname, "w") as f:
+                    json.dump(art, f, indent=1)
+                print(f"    ok: compile={art['compile_s']}s "
+                      f"flops={art['flops']:.3e} "
+                      f"coll={art['collectives']['total_bytes']:.3e}B",
+                      flush=True)
+            except Exception as e:
+                failures.append((arch, shape_name, mp, repr(e)))
+                print(f"    FAIL: {e}\n{traceback.format_exc()}", flush=True)
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f[:3], f[3][:200])
+        raise SystemExit(1)
+    print("\nall cells passed")
+
+
+if __name__ == "__main__":
+    main()

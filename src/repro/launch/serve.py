@@ -1,0 +1,61 @@
+"""Serving driver: build an ANNS index with a variant config and serve
+batched queries (the paper's deployment artifact), plus an optional policy
+generation service.
+
+    PYTHONPATH=src python -m repro.launch.serve --dataset sift-128-euclidean \
+        --n-base 5000 --n-requests 256 --ef 64
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="sift-128-euclidean")
+    ap.add_argument("--n-base", type=int, default=5000)
+    ap.add_argument("--n-query", type=int, default=128)
+    ap.add_argument("--n-requests", type=int, default=256)
+    ap.add_argument("--ef", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--optimized", action="store_true",
+                    help="serve the CRINN-optimized variant instead of GLASS")
+    args = ap.parse_args()
+
+    import numpy as np
+    from repro.anns import Engine, make_dataset
+    from repro.anns.datasets import recall_at_k
+    from repro.anns.engine import GLASS_BASELINE, VariantConfig
+    from repro.runtime.server import AnnsServer
+
+    ds = make_dataset(args.dataset, n_base=args.n_base, n_query=args.n_query)
+    variant = GLASS_BASELINE
+    if args.optimized:
+        variant = VariantConfig(alpha=1.2, num_entry_points=3,
+                                gather_width=2, patience=4,
+                                adaptive_ef_coef=14.5)
+    print(f"building index ({variant.describe()}) ...")
+    t0 = time.time()
+    eng = Engine(variant, metric=ds.metric)
+    eng.build_index(ds.base)
+    print(f"built in {time.time()-t0:.1f}s")
+
+    server = AnnsServer(eng, max_batch=args.max_batch, ef=args.ef, k=args.k)
+    rng = np.random.default_rng(0)
+    order = rng.integers(0, len(ds.queries), size=args.n_requests)
+    t0 = time.time()
+    for i in order:
+        server.submit(ds.queries[i])
+    responses = server.run()
+    dt = time.time() - t0
+    lat = np.array([r.latency_ms for r in responses])
+    found = np.stack([r.ids for r in responses])
+    rec = recall_at_k(found, ds.gt[order], args.k)
+    print(f"served {len(responses)} requests in {dt:.2f}s "
+          f"({len(responses)/dt:,.0f} QPS)")
+    print(f"recall@{args.k}={rec:.3f}  latency p50={np.percentile(lat,50):.1f}ms "
+          f"p99={np.percentile(lat,99):.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

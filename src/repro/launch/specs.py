@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No allocation: the dry-run lowers against these.  Shardings follow
+``repro.dist.sharding``.  Train cells carry the full GRPO batch schema
+(tokens/mask/advantages/old/ref logps); decode cells carry one new token +
+the KV/state cache pytree at seq_len; [audio]/[vlm] archs get precomputed
+frame/patch embeddings instead of token ids (stub frontend per assignment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.dist.sharding import (batch_sharding, cache_shardings,
+                                 scalar_sharding)
+from repro.models import model as model_lib
+
+
+def _dp(mesh, batch: int | None = None):
+    axes = tuple(a for a in ("pod", "data", "replica") if a in mesh.axis_names)
+    if batch is not None:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if batch % size != 0:
+            return None          # tiny batches (long_500k b=1): replicate
+    return axes if len(axes) != 1 else axes[0]
+
+
+def _tok_or_embeds(cfg: ModelConfig, batch: int, seq: int, mesh):
+    dp = _dp(mesh, batch)
+    if cfg.frontend != "none":
+        spec = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+        shard = NamedSharding(mesh, P(dp, None, None))
+        return {"embeds": spec}, {"embeds": shard}
+    spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    shard = NamedSharding(mesh, P(dp, None))
+    return {"tokens": spec}, {"tokens": shard}
+
+
+def train_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    """GRPO train batch: returns (specs, shardings) dicts."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp(mesh)
+    x_spec, x_shard = _tok_or_embeds(cfg, B, S, mesh)
+    f32 = jnp.float32
+    specs = {
+        **x_spec,
+        "tokens": x_spec.get("tokens",
+                             jax.ShapeDtypeStruct((B, S), jnp.int32)),
+        "mask": jax.ShapeDtypeStruct((B, S), f32),
+        "advantages": jax.ShapeDtypeStruct((B,), f32),
+        "old_logps": jax.ShapeDtypeStruct((B, S), f32),
+        "ref_logps": jax.ShapeDtypeStruct((B, S), f32),
+    }
+    shardings = {
+        **x_shard,
+        "tokens": x_shard.get("tokens", NamedSharding(mesh, P(dp, None))),
+        "mask": NamedSharding(mesh, P(dp, None)),
+        "advantages": NamedSharding(mesh, P(dp)),
+        "old_logps": NamedSharding(mesh, P(dp, None)),
+        "ref_logps": NamedSharding(mesh, P(dp, None)),
+    }
+    return specs, shardings
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    x_spec, x_shard = _tok_or_embeds(cfg, B, S, mesh)
+    cache = model_lib.cache_specs(cfg, B, S)
+    cache_sh = cache_shardings(cache, mesh)
+    return (x_spec, cache), (x_shard, cache_sh)
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    """One decode step against a seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    x_spec, x_shard = _tok_or_embeds(cfg, B, 1, mesh)
+    cache = model_lib.cache_specs(cfg, B, S)
+    cache_sh = cache_shardings(cache, mesh)
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+    return (x_spec, cache, clen), (x_shard, cache_sh, scalar_sharding(mesh))

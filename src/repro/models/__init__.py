@@ -1,0 +1,4 @@
+from repro.models.runtime import Runtime
+from repro.models import model
+
+__all__ = ["Runtime", "model"]

@@ -1,0 +1,278 @@
+"""GQA attention: chunked flash-style training/prefill path + KV-cache decode.
+
+Two training-time implementations, selectable via ``impl``:
+
+- ``"masked"``  — scan over all (q-chunk, kv-chunk) pairs with causal masking.
+  Simple; wastes ~2x FLOPs on fully-masked blocks for full causal attention.
+  This is the paper-faithful *baseline* recorded in EXPERIMENTS.md §Perf.
+- ``"triangle"`` — scan over only the valid causal/banded block pairs (the
+  pair list is static at trace time), recovering the 2x.  The beyond-paper
+  optimized path.
+
+Both use the online-softmax (flash) recurrence so the S x S score matrix is
+never materialised — the per-step working set is (B, H, Cq, Ck).
+
+Sliding-window layers restrict the pair list to the band, so SWA archs
+(h2o-danube, gemma2 local layers) are sub-quadratic in both FLOPs and bytes.
+
+The Pallas TPU kernel in ``repro.kernels.flash`` implements the same
+contract for the real-hardware path (validated against ``ref.py`` oracle in
+interpret mode); the jnp path here is what the CPU dry-run lowers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, pdtype, rope_freqs, apply_rope
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps fp32 softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = pdtype(cfg)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    std = d ** -0.5
+    return {
+        "wq": (jax.random.normal(kq, (d, h, hd)) * std).astype(dt),
+        "wk": (jax.random.normal(kk, (d, hk, hd)) * std).astype(dt),
+        "wv": (jax.random.normal(kv, (d, hk, hd)) * std).astype(dt),
+        "wo": (jax.random.normal(ko, (h, hd, d)) * (h * hd) ** -0.5).astype(dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention core (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_pairs(n_chunks: int, w_chunks: Optional[int], impl: str) -> list[tuple[int, int]]:
+    """Static (qi, kj) block pair list.  w_chunks=None => full causal."""
+    pairs = []
+    for i in range(n_chunks):
+        lo = 0 if w_chunks is None else max(0, i - w_chunks)
+        if impl == "masked" and w_chunks is None:
+            lo = 0  # same as triangle lo for causal; masked differs below
+        for j in range(lo, i + 1):
+            pairs.append((i, j))
+    return pairs
+
+
+def chunked_attention(
+    q: jax.Array,            # (B, S, Hq, D)
+    k: jax.Array,            # (B, S, Hk, D)
+    v: jax.Array,            # (B, S, Hk, D)
+    *,
+    q_scale: float,
+    window: int = 0,         # 0 = full causal
+    softcap: float = 0.0,
+    chunk: int = 512,
+    impl: str = "masked",
+    unroll: bool = False,    # costing pass: trip-count-correct FLOPs
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    chunk = min(chunk, S)
+    while S % chunk != 0:       # largest divisor of S not exceeding `chunk`
+        chunk -= 1
+    n = S // chunk
+    w_chunks = None if window <= 0 else max(1, math.ceil(window / chunk))
+
+    # (B, Hk, G, n, C, D) blocks
+    qb = q.reshape(B, n, chunk, Hk, G, D).transpose(0, 3, 4, 1, 2, 5)
+    kb = k.reshape(B, n, chunk, Hk, D).transpose(0, 3, 1, 2, 4)
+    vb = v.reshape(B, n, chunk, Hk, D).transpose(0, 3, 1, 2, 4)
+
+    if impl == "masked":
+        # scan over ALL kv chunks for each q chunk, masking non-causal blocks.
+        pairs = [(i, j) for i in range(n) for j in range(n)]
+    else:
+        pairs = _block_pairs(n, w_chunks, impl)
+
+    pair_arr = jnp.asarray(pairs, jnp.int32)                      # (P, 2)
+    # flags: is this the last j for its i? (emit output there)
+    last_flags = []
+    for idx, (i, j) in enumerate(pairs):
+        nxt = pairs[idx + 1] if idx + 1 < len(pairs) else (None, None)
+        last_flags.append(1 if nxt[0] != i else 0)
+    first_flags = []
+    prev_i = None
+    for (i, j) in pairs:
+        first_flags.append(1 if i != prev_i else 0)
+        prev_i = i
+    flags = jnp.asarray(list(zip(first_flags, last_flags)), jnp.int32)
+
+    pos = jnp.arange(chunk, dtype=jnp.int32)
+
+    def body(carry, inp):
+        m, l, acc, out = carry
+        (qi, kj), (is_first, is_last) = inp
+        m = jnp.where(is_first, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(is_first, jnp.zeros_like(l), l)
+        acc = jnp.where(is_first, jnp.zeros_like(acc), acc)
+
+        qc = jax.lax.dynamic_index_in_dim(qb, qi, axis=3, keepdims=False)  # (B,Hk,G,C,D)
+        kc = jax.lax.dynamic_index_in_dim(kb, kj, axis=2, keepdims=False)  # (B,Hk,C,D)
+        vc = jax.lax.dynamic_index_in_dim(vb, kj, axis=2, keepdims=False)
+
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc,
+                       preferred_element_type=jnp.float32) * q_scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        # causal / band mask inside the block
+        qpos = qi * chunk + pos[:, None]
+        kpos = kj * chunk + pos[None, :]
+        mask = kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))               # (B,Hk,G,C)
+        p = jnp.exp(s - m_new[..., None])
+        scale_old = jnp.exp(m - m_new)
+        l = l * scale_old + jnp.sum(p, axis=-1)
+        acc = acc * scale_old[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        m = m_new
+
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jax.lax.cond(
+            is_last == 1,
+            lambda t: jax.lax.dynamic_update_index_in_dim(t, o.astype(t.dtype), qi, axis=3),
+            lambda t: t,
+            out,
+        )
+        return (m, l, acc, out), None
+
+    m0 = jnp.full((B, Hk, G, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, chunk), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, chunk, D), jnp.float32)
+    o0 = jnp.zeros((B, Hk, G, n, chunk, D), jnp.float32)
+    (_, _, _, out), _ = jax.lax.scan(body, (m0, l0, a0, o0), (pair_arr, flags),
+                                     unroll=len(pairs) if unroll else 1)
+    # (B,Hk,G,n,C,D) -> (B,S,Hq,D)
+    return out.transpose(0, 3, 4, 1, 2, 5).reshape(B, S, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token vs KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attend(
+    q: jax.Array,            # (B, 1, Hq, D)
+    k_cache: jax.Array,      # (B, Sc, Hk, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array,    # () int32 — number of valid positions
+    *,
+    q_scale: float,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, Sc, Hk, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, Hk, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * q_scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(Sc, dtype=jnp.int32)[None, None, None, :] < cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, window: int, batch: int, max_seq: int, dtype) -> dict:
+    size = min(window, max_seq) if window > 0 else max_seq
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig, window: int, batch: int, max_seq: int, dtype):
+    size = min(window, max_seq) if window > 0 else max_seq
+    shp = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype), "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+def apply_attention(
+    p: Params,
+    x: jax.Array,                 # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    window: int,
+    positions: jax.Array,         # (B, S) int32 absolute positions
+    mode: str,                    # train | prefill | decode
+    cache: Optional[dict] = None,
+    cache_len: Optional[jax.Array] = None,   # () valid length before this call
+    attn_impl: str = "masked",
+    attn_chunk: int = 512,
+    unroll: bool = False,
+    rt=None,                      # Runtime: seq-parallel decode dispatch
+    core_identity: bool = False,  # costing: o := q (see Runtime)
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    cos, sin = rope_freqs(cfg, positions, cfg.head_dim)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        if core_identity:
+            o = q
+        else:
+            o = chunked_attention(
+                q, k, v, q_scale=cfg.q_scale, window=window,
+                softcap=cfg.attn_logit_softcap, chunk=attn_chunk,
+                impl=attn_impl, unroll=unroll)
+        if mode == "prefill":
+            assert cache is not None
+            size = cache["k"].shape[1]
+            if size >= S:
+                nk = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                nv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            else:  # ring: keep last `size` positions at their natural slots
+                # token t lives at slot t % size => roll by S % size
+                nk = jnp.roll(k[:, -size:], S % size, axis=1).astype(cache["k"].dtype)
+                nv = jnp.roll(v[:, -size:], S % size, axis=1).astype(cache["v"].dtype)
+            new_cache = {"k": nk, "v": nv}
+    elif (rt is not None and rt.seq_shard_decode and rt.mesh is not None
+          and "model" in getattr(rt.mesh, "axis_names", ())):
+        # optimized path: flash-decode partial-softmax combine over the
+        # seq-sharded KV cache (repro.dist.seq_decode)
+        from repro.dist.seq_decode import seq_sharded_decode
+        o, new_cache = seq_sharded_decode(
+            q, k, v, cache, cache_len, window=window, q_scale=cfg.q_scale,
+            softcap=cfg.attn_logit_softcap, mesh=rt.mesh, dp_axes=rt.dp_axes)
+    else:  # decode: S == 1
+        assert cache is not None and cache_len is not None
+        size = cache["k"].shape[1]
+        slot = jnp.where(window > 0, cache_len % size, jnp.minimum(cache_len, size - 1))
+        nk = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        nv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        valid = jnp.minimum(cache_len + 1, size)
+        o = decode_attend(q, nk, nv, valid, q_scale=cfg.q_scale,
+                          softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": nk, "v": nv}
+
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return out, new_cache

@@ -1,0 +1,34 @@
+"""Stub modality frontends (per assignment: backbone-only for [audio]/[vlm]).
+
+``input_specs()`` for musicgen/internvl2 supplies *precomputed* frame/patch
+embeddings; these stubs exist so smoke tests and examples can fabricate
+deterministic embeddings of the right shape from integer inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frame_embeddings(key: jax.Array, cfg: ModelConfig, batch: int,
+                           seq: int) -> jax.Array:
+    """Stand-in for the EnCodec codebook-sum embedding (musicgen)."""
+    x = jax.random.normal(key, (batch, seq, cfg.d_model)) * 0.02
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def vision_patch_embeddings(key: jax.Array, cfg: ModelConfig, batch: int,
+                            seq: int) -> jax.Array:
+    """Stand-in for InternViT patch features projected to d_model (internvl2)."""
+    x = jax.random.normal(key, (batch, seq, cfg.d_model)) * 0.02
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def make_embeds(key: jax.Array, cfg: ModelConfig, batch: int, seq: int) -> jax.Array:
+    if cfg.frontend == "audio_frames":
+        return audio_frame_embeddings(key, cfg, batch, seq)
+    if cfg.frontend == "vision_patches":
+        return vision_patch_embeddings(key, cfg, batch, seq)
+    raise ValueError(cfg.frontend)

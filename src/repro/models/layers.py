@@ -1,0 +1,147 @@
+"""Shared neural building blocks: norms, RoPE, embeddings, gated FFN.
+
+All modules are (init, apply) function pairs over plain-dict pytrees — no
+framework dependency.  Parameter dtype is bf16 by default (production
+training keeps fp32 master copies in the optimizer state, see
+``repro.optim.adamw``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.zeros((cfg.d_model,), jnp.float32),
+                "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """RMSNorm / LayerNorm in fp32, cast back to input dtype.
+
+    Scales are stored zero-centred (gemma-style ``1 + w``) for *all* archs —
+    zero-init'd scale == identity gain, which keeps init variance sane and
+    matches gemma2's unit-offset convention exactly.
+    """
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * (1.0 + p["scale"]) + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * (1.0 + p["scale"])
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array, head_dim: int) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for the rotary fraction of ``head_dim``.
+
+    positions: (..., S) int32.  Returns cos/sin of shape (..., S, rot/2).
+    """
+    rot = int(head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    if cfg.rope_theta <= 0 or rot == 0:
+        shape = positions.shape + (0,)
+        z = jnp.zeros(shape, jnp.float32)
+        return z, z
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, R/2) or (S, R/2). Rotates first R dims."""
+    r2 = cos.shape[-1]
+    if r2 == 0:
+        return x
+    rot, rest = x[..., : 2 * r2], x[..., 2 * r2:]
+    x1, x2 = rot[..., 0::2], rot[..., 1::2]
+    if cos.ndim == x.ndim - 1:       # (B, S, R/2) -> insert head axis
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(rot.shape)
+    return jnp.concatenate([out.astype(x.dtype), rest], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    std = cfg.d_model ** -0.5
+    p = {"embedding": (jax.random.normal(k1, (cfg.padded_vocab, cfg.d_model)) * std).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(k2, (cfg.d_model, cfg.padded_vocab)) * std).astype(dt)
+    return p
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Returns fp32 logits (optionally soft-capped — gemma2)."""
+    w = p["embedding"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key: jax.Array, cfg: ModelConfig, d_ff: int) -> Params:
+    dt = pdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "w_gate": (jax.random.normal(k1, (d, d_ff)) * d ** -0.5).astype(dt),
+        "w_in":   (jax.random.normal(k2, (d, d_ff)) * d ** -0.5).astype(dt),
+        "w_out":  (jax.random.normal(k3, (d_ff, d)) * d_ff ** -0.5).astype(dt),
+    }
+
+
+def _act(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def apply_ffn(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = _act(jnp.einsum("...d,df->...f", x, p["w_gate"]), cfg)
+    h = h * jnp.einsum("...d,df->...f", x, p["w_in"])
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])

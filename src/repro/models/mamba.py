@@ -1,0 +1,144 @@
+"""Mamba (S6) mixer — used by jamba's non-attention layers.
+
+Training/prefill uses a chunked associative scan over the diagonal SSM
+recurrence  h_t = a_t * h_{t-1} + b_t  (a_t = exp(dt_t * A)); decode is the
+single-step recurrence carrying {conv, ssm} state.  d_inner is sharded over
+the "model" mesh axis (the recurrence is channel-diagonal, so TP over
+d_inner is exact).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, pdtype
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = pdtype(cfg)
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    # S4D-real init for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_in)) * std).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, d_in)) *
+                   cfg.mamba_d_conv ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": (jax.random.normal(ks[2], (d_in, r + 2 * n)) * d_in ** -0.5).astype(dt),
+        "dt_proj": (jax.random.normal(ks[3], (r, d_in)) * r ** -0.5).astype(dt),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),                               # (d_in, n) fp32
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_in, d)) * d_in ** -0.5).astype(dt),
+    }
+
+
+def state_specs(cfg: ModelConfig, batch: int, dtype):
+    d_in = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.mamba_d_conv - 1, d_in), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, d_in, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def make_state(cfg: ModelConfig, batch: int, dtype):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_specs(cfg, batch, dtype))
+
+
+def _ssm_coeffs(p: Params, xc: jax.Array, cfg: ModelConfig):
+    """xc: (..., d_in) post-conv activations -> (a, b, c_mat, dt)."""
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("...i,ij->...j", xc, p["x_proj"])
+    dt_in, b_in, c_in = proj[..., :r], proj[..., r:r + n], proj[..., r + n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt_in, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])                                   # (..., d_in)
+    a_mat = -jnp.exp(p["a_log"])                          # (d_in, n)
+    a = jnp.exp(dt[..., None] * a_mat)                    # (..., d_in, n)
+    b = (dt * xc.astype(jnp.float32))[..., None] * b_in.astype(jnp.float32)[..., None, :]
+    return a, b, c_in.astype(jnp.float32)
+
+
+def apply_mamba(
+    p: Params,
+    x: jax.Array,                       # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    mode: str,                          # train | prefill | decode
+    state: Optional[dict] = None,
+    chunk: int = 512,
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    d_in = cfg.mamba_expand * d
+    kw = cfg.mamba_d_conv
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+
+    if mode == "decode":
+        assert state is not None and S == 1
+        hist = jnp.concatenate([state["conv"], xi], axis=1)     # (B, kw, d_in)
+        xc = jnp.einsum("bki,ki->bi", hist, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None, :]                        # (B,1,d_in)
+        a, b, c = _ssm_coeffs(p, xc[:, 0], cfg)                 # (B,d_in,n)
+        h = a * state["ssm"] + b
+        y = jnp.einsum("bin,bn->bi", h, c) + p["d_skip"] * xc[:, 0].astype(jnp.float32)
+        y = y[:, None, :].astype(x.dtype)
+        new_state = {"conv": hist[:, 1:], "ssm": h}
+    else:
+        # causal depthwise conv over time
+        pad = jnp.zeros((B, kw - 1, d_in), xi.dtype)
+        xp = jnp.concatenate([pad, xi], axis=1)
+        xc = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(kw)) + p["conv_b"]
+        xc = jax.nn.silu(xc)                                    # (B,S,d_in)
+
+        a, b, c = _ssm_coeffs(p, xc, cfg)                       # (B,S,d_in,n)
+
+        nchunks = max(1, S // chunk)
+        csz = S // nchunks if S % nchunks == 0 else S
+        nchunks = S // csz
+        a_ch = a.reshape(B, nchunks, csz, d_in, cfg.mamba_d_state)
+        b_ch = b.reshape(B, nchunks, csz, d_in, cfg.mamba_d_state)
+
+        def combine(lhs, rhs):
+            al, bl = lhs
+            ar, br = rhs
+            return al * ar, ar * bl + br
+
+        def chunk_body(h0, ab):
+            ac, bc = ab                                          # (B,csz,d_in,n)
+            # fold carry into the first element of the chunk
+            bc = bc.at[:, 0].add(ac[:, 0] * h0)
+            aa, hh = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+            return hh[:, -1], hh
+
+        h0 = state["ssm"] if (state is not None) else jnp.zeros(
+            (B, d_in, cfg.mamba_d_state), jnp.float32)
+        h_last, hs = jax.lax.scan(
+            chunk_body, h0, (a_ch.transpose(1, 0, 2, 3, 4), b_ch.transpose(1, 0, 2, 3, 4)))
+        hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in, cfg.mamba_d_state)
+        y = jnp.einsum("bsin,bsn->bsi", hs, c) + p["d_skip"] * xc.astype(jnp.float32)
+        y = y.astype(x.dtype)
+        new_state = None
+        if mode == "prefill":
+            conv_tail = jnp.concatenate([pad, xi], axis=1)[:, S:S + kw - 1]
+            conv_tail = xp[:, -(kw - 1):] if kw > 1 else jnp.zeros((B, 0, d_in), xi.dtype)
+            new_state = {"conv": conv_tail, "ssm": h_last}
+
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_state

@@ -1,0 +1,343 @@
+"""The decoder LM: init / train-forward / prefill / decode over any
+:class:`ModelConfig` in the zoo.
+
+The layer stack is ``prefix blocks (unrolled) + pattern x num_periods`` with
+``lax.scan`` over periods — HLO stays one-period-sized regardless of depth
+(48-layer models compile as fast as 2-layer ones), which is what makes the
+34-cell dry-run tractable and keeps remat policy per-period.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_lib
+from repro.models import rwkv
+from repro.models.layers import (Params, apply_ffn, apply_norm, embed_tokens,
+                                 init_embed, init_ffn, init_norm, pdtype,
+                                 unembed)
+from repro.models.runtime import Runtime
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key: jax.Array, cfg: ModelConfig, spec: BlockSpec, idx: int) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    if cfg.post_block_norm:
+        p["post_norm1"] = init_norm(cfg)
+        p["post_norm2"] = init_norm(cfg)
+    if spec.kind == "attention":
+        p["mixer"] = attn.init_attention(ks[0], cfg)
+    elif spec.kind == "mamba":
+        p["mixer"] = mam.init_mamba(ks[0], cfg)
+    elif spec.kind == "rwkv6":
+        p["mixer"] = rwkv.init_rwkv_time_mix(ks[0], cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.moe:
+        p["ffn"] = moe_lib.init_moe(ks[1], cfg)
+        if cfg.moe_num_shared > 0:
+            p["shared_ffn"] = init_ffn(ks[2], cfg, cfg.moe_num_shared * cfg.moe_d_ff)
+    elif spec.kind == "rwkv6":
+        p["ffn"] = rwkv.init_rwkv_channel_mix(ks[1], cfg)
+    else:
+        ff = cfg.dense_d_ff if (cfg.dense_d_ff and idx < cfg.first_k_dense) else cfg.d_ff
+        p["ffn"] = init_ffn(ks[1], cfg, ff)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    pattern = cfg.layer_pattern()
+    periods = cfg.num_periods()
+    kemb, kpre, kpat, kfin = jax.random.split(key, 4)
+
+    prefix = []
+    for i, spec in enumerate(cfg.prefix_pattern()):
+        prefix.append(_init_block(jax.random.fold_in(kpre, i), cfg, spec, i))
+
+    # stacked pattern params: leading dim = num_periods
+    def one_period(pkey):
+        base = cfg.first_k_dense
+        return [
+            _init_block(jax.random.fold_in(pkey, pos), cfg, spec, base + pos)
+            for pos, spec in enumerate(pattern)
+        ]
+
+    per = [one_period(jax.random.fold_in(kpat, t)) for t in range(periods)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    return {
+        "embed": init_embed(kemb, cfg),
+        "prefix": prefix,
+        "blocks": stacked,
+        "final_norm": init_norm(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_spec(cfg: ModelConfig, spec: BlockSpec, batch: int, max_seq: int, dtype):
+    if spec.kind == "attention":
+        return attn.cache_specs(cfg, spec.attn_window, batch, max_seq, dtype)
+    if spec.kind == "mamba":
+        return mam.state_specs(cfg, batch, dtype)
+    if spec.kind == "rwkv6":
+        return rwkv.state_specs(cfg, batch, dtype)
+    raise ValueError(spec.kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """ShapeDtypeStructs for the full-stack cache pytree (dry-run input)."""
+    dt = pdtype(cfg)
+    prefix = [
+        _block_cache_spec(cfg, spec, batch, max_seq, dt)
+        for spec in cfg.prefix_pattern()
+    ]
+    periods = cfg.num_periods()
+
+    def stack(sd):
+        return jax.ShapeDtypeStruct((periods,) + sd.shape, sd.dtype)
+
+    pattern = [
+        jax.tree.map(stack, _block_cache_spec(cfg, spec, batch, max_seq, dt))
+        for spec in cfg.layer_pattern()
+    ]
+    return {"prefix": prefix, "pattern": pattern}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(
+    bp: Params, x: jax.Array, cfg: ModelConfig, spec: BlockSpec, rt: Runtime, *,
+    idx_in_stack: int, positions: jax.Array, mode: str,
+    cache: Optional[dict], cache_len: Optional[jax.Array],
+):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(bp["norm1"], x, cfg)
+    if spec.kind == "attention":
+        mix, new_cache = attn.apply_attention(
+            bp["mixer"], h, cfg, window=spec.attn_window, positions=positions,
+            mode=mode, cache=cache, cache_len=cache_len,
+            attn_impl=rt.attn_impl, attn_chunk=rt.attn_chunk,
+            unroll=rt.unroll_layers, rt=rt,
+            core_identity=rt.attn_core_identity)
+    elif spec.kind == "mamba":
+        mix, new_cache = mam.apply_mamba(
+            bp["mixer"], h, cfg, mode=mode, state=cache, chunk=rt.mamba_chunk)
+    else:
+        mix, new_cache = rwkv.apply_time_mix(bp["mixer"], h, cfg, mode=mode, state=cache)
+    if cfg.post_block_norm:
+        mix = apply_norm(bp["post_norm1"], mix, cfg)
+    x = x + mix
+
+    h = apply_norm(bp["norm2"], x, cfg)
+    if spec.moe:
+        out, aux = moe_lib.apply_moe(
+            bp["ffn"], h, cfg, mesh=rt.mesh, ep_axis=rt.tp_axis,
+            dp_axes=rt.dp_axes, capacity_factor=rt.capacity_factor)
+        if cfg.moe_num_shared > 0:
+            out = out + apply_ffn(bp["shared_ffn"], h, cfg)
+    elif spec.kind == "rwkv6":
+        out, cm_state = rwkv.apply_channel_mix(
+            bp["ffn"], h, cfg, mode=mode,
+            state=cache if mode == "decode" else None)
+        if new_cache is not None and cm_state is not None:
+            new_cache = {**new_cache, **cm_state}
+        elif mode in ("prefill",) and new_cache is not None:
+            new_cache = {**new_cache, "shift_cm": h[:, -1]}
+    else:
+        out = apply_ffn(bp["ffn"], h, cfg)
+    if cfg.post_block_norm:
+        out = apply_norm(bp["post_norm2"], out, cfg)
+    x = x + out
+    if new_cache is None:
+        new_cache = cache  # train mode: pass-through (unused)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Trunk forward (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _trunk(
+    params: Params, x: jax.Array, cfg: ModelConfig, rt: Runtime, *,
+    positions: jax.Array, mode: str,
+    caches: Optional[dict], cache_len: Optional[jax.Array],
+):
+    pattern = cfg.layer_pattern()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # prefix blocks (unrolled — deepseek's first dense layer)
+    new_prefix_caches = []
+    for i, spec in enumerate(cfg.prefix_pattern()):
+        c = caches["prefix"][i] if caches is not None else None
+        x, nc, aux = _apply_block(
+            params["prefix"][i], x, cfg, spec, rt, idx_in_stack=i,
+            positions=positions, mode=mode, cache=c, cache_len=cache_len)
+        new_prefix_caches.append(nc)
+        aux_total = aux_total + aux
+
+    # pattern periods via scan
+    def period_body(carry, xs):
+        xc, auxc = carry
+        bps, cs = xs
+        new_cs = []
+        for pos, spec in enumerate(pattern):
+            c = cs[pos] if cs is not None else None
+            xc, nc, aux = _apply_block(
+                bps[pos], xc, cfg, spec, rt, idx_in_stack=cfg.first_k_dense + pos,
+                positions=positions, mode=mode, cache=c, cache_len=cache_len)
+            new_cs.append(nc)
+            auxc = auxc + aux
+        return (xc, auxc), new_cs
+
+    body = period_body
+    if rt.remat == "block" and mode == "train":
+        body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    unroll = cfg.num_periods() if rt.unroll_layers else 1
+    xs = (params["blocks"], caches["pattern"] if caches is not None else None)
+    periods = cfg.num_periods()
+    two_level = (caches is None and rt.remat == "block" and mode == "train"
+                 and rt.scan_groups > 1 and periods % rt.scan_groups == 0)
+    if two_level:
+        # sqrt-memory remat: outer scan over G groups (remat'd: saves only
+        # the G inter-group carries), inner scan over P/G periods (per-
+        # period remat during the recompute) => peak ~ (G + P/G) carries
+        # instead of P.
+        G = rt.scan_groups
+        inner = periods // G
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, inner) + a.shape[1:]), params["blocks"])
+
+        def inner_scan(carry, gparams):
+            def body2(c, bps):
+                return body(c, (bps, None))
+            return jax.lax.scan(body2, carry, gparams)
+
+        def group_body(carry, gparams):
+            carry, _ = inner_scan(carry, gparams)
+            return carry, None
+
+        group_ck = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux_total), _ = jax.lax.scan(group_ck, (x, aux_total), grouped)
+        new_pattern_caches = None
+    elif caches is None:
+        # scan xs must be arrays: drop the None by closing over it
+        def body2(carry, bps):
+            return body(carry, (bps, None))
+        (x, aux_total), _ = jax.lax.scan(body2, (x, aux_total),
+                                         params["blocks"], unroll=unroll)
+        new_pattern_caches = None
+    else:
+        (x, aux_total), new_pattern_caches = jax.lax.scan(
+            body, (x, aux_total), xs, unroll=unroll)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"prefix": new_prefix_caches, "pattern": new_pattern_caches}
+    return x, new_caches, aux_total
+
+
+def _embed_inputs(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    if "embeds" in batch:      # stub modality frontend output (audio/vlm)
+        return batch["embeds"].astype(pdtype(cfg))
+    return embed_tokens(params["embed"], batch["tokens"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, batch: dict, cfg: ModelConfig, rt: Runtime):
+    """Returns (hidden (B,S,d), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h, _, aux = _trunk(params, x, cfg, rt, positions=positions, mode="train",
+                       caches=None, cache_len=None)
+    return h, aux
+
+
+def token_logprobs(params: Params, hidden: jax.Array, targets: jax.Array,
+                   cfg: ModelConfig, rt: Runtime) -> jax.Array:
+    """Per-token log p(target) — chunked over the sequence so the full
+    (B,S,V) logits tensor is never materialised (V up to 256k)."""
+    B, S, d = hidden.shape
+    ck = min(rt.logit_chunk, S)
+    while S % ck != 0:          # largest divisor of S not exceeding logit_chunk
+        ck -= 1
+    n = S // ck
+    hs = hidden.reshape(B, n, ck, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, ck).transpose(1, 0, 2)
+
+    def chunk_fn(_, ht_tt):
+        ht, tt = ht_tt
+        logits = unembed(params["embed"], ht, cfg)          # (B,ck,V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        return None, tgt - logz
+
+    chunk_fn_ck = jax.checkpoint(chunk_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    _, lp = jax.lax.scan(chunk_fn_ck, None, (hs, ts),
+                         unroll=n if rt.unroll_layers else 1)
+    return lp.transpose(1, 0, 2).reshape(B, S)
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig, rt: Runtime):
+    """Next-token cross-entropy (tokens shifted inside). Returns (loss, aux)."""
+    hidden, aux = forward_train(params, batch, cfg, rt)
+    tokens = batch.get("labels", batch.get("tokens"))
+    inputs_h = hidden[:, :-1]
+    targets = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(targets, jnp.float32) if mask is None else mask[:, 1:]
+    lp = token_logprobs(params, inputs_h, targets, cfg, rt)
+    loss = -jnp.sum(lp * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, aux
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig, rt: Runtime,
+            caches: dict):
+    """Run the prompt; returns (last-position logits (B,V), caches, cache_len)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h, new_caches, _ = _trunk(params, x, cfg, rt, positions=positions,
+                              mode="prefill", caches=caches,
+                              cache_len=jnp.zeros((), jnp.int32))
+    logits = unembed(params["embed"], h[:, -1:], cfg)[:, 0]
+    return logits, new_caches, jnp.asarray(S, jnp.int32)
+
+
+def decode_step(params: Params, batch: dict, cfg: ModelConfig, rt: Runtime,
+                caches: dict, cache_len: jax.Array):
+    """One token in, one token's logits out. batch: {tokens (B,1)} or {embeds}."""
+    x = _embed_inputs(params, batch, cfg)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cache_len[None, None], (B, 1)).astype(jnp.int32)
+    h, new_caches, _ = _trunk(params, x, cfg, rt, positions=positions,
+                              mode="decode", caches=caches, cache_len=cache_len)
+    logits = unembed(params["embed"], h, cfg)[:, 0]          # (B, V)
+    return logits, new_caches, cache_len + 1

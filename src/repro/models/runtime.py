@@ -1,0 +1,44 @@
+"""Runtime knobs that are *not* architecture: mesh handles, kernel impl
+selection, remat policy, chunk sizes.  Everything the perf hillclimb touches
+lives here so EXPERIMENTS.md §Perf changes are one-line config diffs."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class Runtime:
+    mesh: object = None                  # jax.sharding.Mesh | None
+    dp_axes: tuple = ("pod", "data", "replica")
+    tp_axis: str = "model"
+    # attention
+    attn_impl: str = "masked"            # masked (baseline) | triangle (optimized)
+    attn_chunk: int = 512
+    # memory policy
+    remat: str = "block"                 # none | block
+    scan_groups: int = 1                 # >1: two-level sqrt-memory remat —
+                                         # outer scan over groups is remat'd,
+                                         # saving G + P/G carries instead of P
+    logit_chunk: int = 512               # chunked CE over sequence
+    # moe
+    capacity_factor: float = 1.25
+    # ssm
+    mamba_chunk: int = 512
+    # decode
+    seq_shard_decode: bool = False       # flash-decode partial-softmax combine
+    # cost accounting: XLA cost_analysis counts scan bodies ONCE, so the
+    # dry-run's costing pass unrolls the layer/CE scans (and uses
+    # single-block attention) to get trip-count-correct FLOP/collective
+    # numbers.  Execution configs keep this False.
+    unroll_layers: bool = False
+    # costing-only: replace the attention core (post-projection) with
+    # identity so the attention core's bytes/FLOPs can be measured by
+    # differencing — used to swap XLA's materialized-score bytes for the
+    # Pallas flash kernel's streaming-traffic model in the roofline.
+    attn_core_identity: bool = False
+
+    def data_axes(self):
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in self.dp_axes if a in self.mesh.axis_names)

@@ -1,0 +1,157 @@
+"""RWKV6 (Finch) mixer — data-dependent decay time-mix + channel-mix.
+
+Attention-free: the per-head state S (head_dim x head_dim) is carried through
+time.  Training uses ``lax.scan`` over time (single while-loop in HLO, cheap
+to compile); a chunked-parallel form is a recorded hillclimb candidate.
+Decode carries {token-shift, wkv} state — O(1) per token, which is why
+rwkv6 runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, pdtype
+
+LORA_DIM = 32
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_rwkv_time_mix(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = pdtype(cfg)
+    d = cfg.d_model
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    std = d ** -0.5
+    return {
+        # token-shift interpolation factors for (r, k, v, w, g)
+        "mu": jnp.zeros((5, d), jnp.float32),
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "lora_a": (jax.random.normal(ks[0], (d, 5, LORA_DIM)) * std).astype(dt),
+        "lora_b": (jax.random.normal(ks[1], (5, LORA_DIM, d)) * LORA_DIM ** -0.5 * 0.1).astype(dt),
+        "wr": (jax.random.normal(ks[2], (d, h, hd)) * std).astype(dt),
+        "wk": (jax.random.normal(ks[3], (d, h, hd)) * std).astype(dt),
+        "wv": (jax.random.normal(ks[4], (d, h, hd)) * std).astype(dt),
+        "wg": (jax.random.normal(ks[5], (d, d)) * std).astype(dt),
+        # decay: w_t = exp(-exp(w0 + lora_w(x_w)))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": (jax.random.normal(ks[6], (d, LORA_DIM)) * std).astype(dt),
+        "w_lora_b": (jax.random.normal(ks[7], (LORA_DIM, d)) * LORA_DIM ** -0.5 * 0.1).astype(dt),
+        "u": jnp.zeros((h, hd), jnp.float32),          # time-first bonus
+        "ln_scale": jnp.ones((h, hd), jnp.float32),    # per-head group norm
+        "wo": (jax.random.normal(ks[8], (d, d)) * std).astype(dt),
+    }
+
+
+def init_rwkv_channel_mix(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = pdtype(cfg)
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), jnp.float32),
+        "mu_r": jnp.zeros((d,), jnp.float32),
+        "wk": (jax.random.normal(ks[0], (d, ff)) * d ** -0.5).astype(dt),
+        "wv": (jax.random.normal(ks[1], (ff, d)) * ff ** -0.5).astype(dt),
+        "wr": (jax.random.normal(ks[2], (d, d)) * d ** -0.5).astype(dt),
+    }
+
+
+def state_specs(cfg: ModelConfig, batch: int, dtype):
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    d = cfg.d_model
+    return {
+        "shift_tm": jax.ShapeDtypeStruct((batch, d), dtype),
+        "shift_cm": jax.ShapeDtypeStruct((batch, d), dtype),
+        "wkv": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+    }
+
+
+def make_state(cfg: ModelConfig, batch: int, dtype):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_specs(cfg, batch, dtype))
+
+
+def _shifted(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} along time; position 0 uses ``prev`` (or zeros)."""
+    B, S, d = x.shape
+    first = prev[:, None, :] if prev is not None else jnp.zeros((B, 1, d), x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def apply_time_mix(
+    p: Params, x: jax.Array, cfg: ModelConfig, *,
+    mode: str, state: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    prev = state["shift_tm"] if state is not None else None
+    xx = _shifted(x, prev) - x
+
+    # data-dependent token-shift mix (5 channels via shared lora)
+    xmix = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dcl->bscl", xmix, p["lora_a"]).astype(jnp.float32))
+    dyn = jnp.einsum("bscl,cld->bscd", lora.astype(x.dtype), p["lora_b"])  # (B,S,5,d)
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (
+        p["mu"].astype(x.dtype)[None, None] + dyn)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,dhe->bshe", xr, p["wr"])
+    k = jnp.einsum("bsd,dhe->bshe", xk, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", xv, p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+
+    w_lora = jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"]).astype(jnp.float32))
+    w_log = p["w0"] + w_lora @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, h, hd)           # (0,1) decay
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = p["u"]
+
+    def step(S_carry, inp):
+        rt, kt, vt, wt = inp                                    # (B,h,hd)
+        kv = kt[..., :, None] * vt[..., None, :]                # (B,h,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S_carry + u[..., None] * kv)
+        S_new = wt[..., None] * S_carry + kv
+        return S_new, y
+
+    S0 = state["wkv"] if state is not None else jnp.zeros((B, h, hd, hd), jnp.float32)
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    S_last, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3)                                # (B,S,h,hd)
+
+    # per-head group norm
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5) * p["ln_scale"]
+    y = y.reshape(B, S, d).astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", y, p["wo"])
+
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {"shift_tm": x[:, -1], "wkv": S_last}
+    return out, new_state
+
+
+def apply_channel_mix(
+    p: Params, x: jax.Array, cfg: ModelConfig, *,
+    mode: str, state: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    prev = state["shift_cm"] if state is not None else None
+    xx = _shifted(x, prev) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    out = r * kv
+    new_state = {"shift_cm": x[:, -1]} if mode in ("prefill", "decode") else None
+    return out, new_state

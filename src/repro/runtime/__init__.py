@@ -1,0 +1,5 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.fault import FailureInjector, StragglerMonitor, ElasticPlan
+
+__all__ = ["Trainer", "TrainerConfig", "FailureInjector", "StragglerMonitor",
+           "ElasticPlan"]

@@ -1,0 +1,112 @@
+"""Batched serving loops.
+
+``AnnsServer`` — dynamic-batching front for the ANNS engine: requests are
+coalesced up to ``max_batch`` (padding to the jitted batch shape so one
+compiled search serves any load level), the paper's "batch processing
+amortises memory access" refinement at the serving layer.
+
+``GenerateServer`` — prefill+decode service for the policy LM (the shape
+the ``decode_*`` dry-run cells lower).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.engine import Engine
+
+
+@dataclass
+class AnnsRequest:
+    query: np.ndarray          # (d,)
+    k: int = 10
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class AnnsResponse:
+    ids: np.ndarray
+    dists: np.ndarray
+    latency_ms: float
+
+
+class AnnsServer:
+    def __init__(self, engine: Engine, *, max_batch: int = 64,
+                 ef: int = 64, k: int = 10):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.ef = ef
+        self.k = k
+        self.queue: list[AnnsRequest] = []
+        self.served = 0
+
+    def submit(self, query: np.ndarray, k: int | None = None):
+        self.queue.append(AnnsRequest(query, k or self.k))
+
+    def _pad(self, queries: np.ndarray) -> np.ndarray:
+        b = queries.shape[0]
+        if b == self.max_batch:
+            return queries
+        pad = np.zeros((self.max_batch - b, queries.shape[1]), queries.dtype)
+        return np.concatenate([queries, pad], axis=0)
+
+    def flush(self) -> list[AnnsResponse]:
+        """Serve up to max_batch queued requests in one jitted search."""
+        if not self.queue:
+            return []
+        batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
+        queries = np.stack([r.query for r in batch]).astype(np.float32)
+        ids, dists = self.engine.search(self._pad(queries), k=self.k, ef=self.ef)
+        jax.block_until_ready(ids)
+        now = time.perf_counter()
+        out = []
+        for i, r in enumerate(batch):
+            out.append(AnnsResponse(
+                ids=np.asarray(ids[i, : r.k]),
+                dists=np.asarray(dists[i, : r.k]),
+                latency_ms=1e3 * (now - r.t_submit)))
+        self.served += len(batch)
+        return out
+
+    def run(self, drain: bool = True) -> list[AnnsResponse]:
+        out = []
+        while self.queue:
+            out.extend(self.flush())
+            if not drain:
+                break
+        return out
+
+
+class GenerateServer:
+    """Minimal continuous-batching text generation over the policy LM."""
+
+    def __init__(self, cfg, params, rt, *, batch: int, max_seq: int):
+        from repro.models import model as model_lib
+        self.model = model_lib
+        self.cfg, self.params, self.rt = cfg, params, rt
+        self.batch, self.max_seq = batch, max_seq
+
+    def generate(self, prompts: np.ndarray, n_steps: int,
+                 temperature: float = 0.0, key=None):
+        """prompts: (B, T) int32 -> (B, n_steps) greedy/sampled tokens."""
+        m, cfg, rt = self.model, self.cfg, self.rt
+        B, T = prompts.shape
+        caches = m.init_cache(cfg, B, self.max_seq)
+        logits, caches, clen = m.prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, cfg, rt, caches)
+        toks = []
+        for i in range(n_steps):
+            if temperature <= 0:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / temperature, axis=-1).astype(jnp.int32)
+            toks.append(nxt)
+            logits, caches, clen = m.decode_step(
+                self.params, {"tokens": nxt[:, None]}, cfg, rt, caches, clen)
+        return np.stack([np.asarray(t) for t in toks], axis=1)

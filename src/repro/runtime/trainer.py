@@ -1,0 +1,150 @@
+"""Fault-tolerant training loop.
+
+The step function is pure and jitted once; around it the Trainer provides:
+checkpoint/restart (resume is exact thanks to the deterministic pipeline),
+failure recovery (restore last checkpoint, replay), straggler monitoring,
+and optional error-feedback gradient compression.  The same loop drives the
+tiny CPU policy in the examples and the pjit'd multi-pod step — only the
+Runtime/mesh differ.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.core.grpo import GRPOConfig, grpo_loss_and_grad
+from repro.models.runtime import Runtime
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import linear_warmup_cosine
+from repro.runtime.fault import (FailureInjector, SimulatedFailure,
+                                 StragglerMonitor)
+
+
+@dataclass(frozen=True)
+class TrainerConfig:
+    total_steps: int = 100
+    warmup_steps: int = 10
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_n: int = 3
+    log_every: int = 10
+    max_restore_attempts: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg, rt: Runtime, params, *,
+                 tcfg: TrainerConfig, gcfg: GRPOConfig | None = None,
+                 opt_cfg: AdamWConfig | None = None,
+                 loss_fn: Optional[Callable] = None,
+                 failure_injector: FailureInjector | None = None):
+        self.cfg = cfg
+        self.rt = rt
+        self.tcfg = tcfg
+        self.gcfg = gcfg or GRPOConfig()
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.params = params
+        self.opt_state = adamw_init(params, self.opt_cfg)
+        self.step = 0
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_n=tcfg.keep_n)
+        self.monitor = StragglerMonitor()
+        self.injector = failure_injector
+        self.metrics_log: list[dict] = []
+        self._loss_fn = loss_fn
+        self._jit_step = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        cfg, rt, gcfg, ocfg, tcfg = (self.cfg, self.rt, self.gcfg,
+                                     self.opt_cfg, self.tcfg)
+        loss_fn = self._loss_fn
+
+        def train_step(params, opt_state, batch, step):
+            if loss_fn is None:
+                (loss, metrics), grads = grpo_loss_and_grad(
+                    params, batch, cfg, rt, gcfg)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, batch), has_aux=True)(params)
+            lr_scale = linear_warmup_cosine(step, tcfg.warmup_steps,
+                                            tcfg.total_steps)
+            params, opt_state, om = adamw_update(
+                params, grads, opt_state, ocfg, lr_scale=lr_scale)
+            if not isinstance(metrics, dict):
+                metrics = {"aux": metrics}
+            return params, opt_state, loss, {**metrics, **om}
+
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def _tree_state(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def save(self):
+        self.ckpt.save(self._tree_state(), self.step)
+
+    def try_restore(self) -> bool:
+        out = self.ckpt.restore(self._tree_state())
+        if out is None:
+            return False
+        tree, step, _ = out
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.step = step
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self, batch_fn: Callable[[int], dict], steps: int | None = None,
+            verbose: bool = False) -> list[dict]:
+        """batch_fn(step) -> batch dict (host numpy or device arrays).
+        Returns per-step metric dicts.  Failures trigger restore + replay."""
+        target = self.step + (steps if steps is not None
+                              else self.tcfg.total_steps)
+        attempts = 0
+        while self.step < target:
+            try:
+                t0 = time.perf_counter()
+                if self.injector is not None:
+                    self.injector.check(self.step)
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in batch_fn(self.step).items()}
+                self.params, self.opt_state, loss, metrics = self._jit_step(
+                    self.params, self.opt_state, batch,
+                    jax.numpy.asarray(self.step))
+                jax.block_until_ready(loss)
+                dt = time.perf_counter() - t0
+                verdict = self.monitor.observe(self.step, dt)
+                rec = {"step": self.step, "loss": float(loss), "dt": dt,
+                       "straggler": verdict,
+                       **{k: float(v) for k, v in metrics.items()}}
+                self.metrics_log.append(rec)
+                if verbose and self.step % self.tcfg.log_every == 0:
+                    print(f"step {self.step}: loss={rec['loss']:.4f} "
+                          f"dt={dt*1e3:.0f}ms {verdict}")
+                self.step += 1
+                if self.step % self.tcfg.ckpt_every == 0:
+                    self.save()
+                attempts = 0
+            except SimulatedFailure as e:
+                attempts += 1
+                if attempts > self.tcfg.max_restore_attempts:
+                    raise
+                failed_at = self.step
+                restored = self.try_restore()
+                if verbose:
+                    print(f"FAILURE at step {failed_at}: {e}; "
+                          f"restored={restored} -> replay from {self.step}")
+                # deterministic pipeline => replay is exact; a fresh jit
+                # step fn re-allocates donated buffers
+                self._jit_step = self._build_step()
+                if not restored:
+                    # no checkpoint yet: restart from step 0 state is the
+                    # caller's responsibility; here we just continue (the
+                    # injector fires once per step)
+                    continue
+        self.ckpt.wait()
+        return self.metrics_log

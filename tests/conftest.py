@@ -1,0 +1,10 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+# smoke tests and benches must see 1 device (dry-run sets its own flags in
+# a separate process); keep CPU math deterministic
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,68 @@
+"""Minimal hypothesis-like property testing harness.
+
+``hypothesis`` is not installed in this offline container (DESIGN.md §3);
+this module provides the small subset we need: ``@given`` with simple
+strategies, deterministic seeding, shrink-free counterexample reporting.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self.draw(rng)))
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda rng: float(lo + (hi - lo) * rng.random()))
+
+
+def sampled_from(seq) -> Strategy:
+    seq = list(seq)
+    return Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def arrays(shape_strategy, lo=-1.0, hi=1.0, dtype=np.float32) -> Strategy:
+    def draw(rng):
+        shape = shape_strategy.draw(rng) if isinstance(shape_strategy, Strategy) \
+            else shape_strategy
+        return (lo + (hi - lo) * rng.random(shape)).astype(dtype)
+    return Strategy(draw)
+
+
+def lists(elem: Strategy, min_size: int, max_size: int) -> Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elem.draw(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def given(n_examples: int = 25, seed: int = 0, **strategies):
+    """Decorator: run the test with ``n_examples`` random draws."""
+    def deco(fn):
+        def wrapper():
+            rng = np.random.default_rng(seed)
+            for ex in range(n_examples):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {ex}: {drawn!r}") from e
+        # plain wrapper (no functools.wraps): pytest must not see the
+        # strategy parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,178 @@
+"""CRINN core unit + property tests: reward (§3.3), exemplar sampling
+(eq. 1), GRPO math (eqs. 2-3), prompt/program codec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import floats, given, integers, lists, sampled_from
+
+from repro.core import prompting
+from repro.core.exemplar_db import ExemplarDB
+from repro.core.grpo import group_advantages
+from repro.core.reward import banded_auc, smooth, speed_reward
+from repro.core.variant_space import (MODULE_ORDER, MODULES, Program,
+                                      knob_count, program_from_variant)
+from repro.anns.engine import GLASS_BASELINE
+
+
+class _Pt:
+    def __init__(self, recall, qps):
+        self.recall, self.qps = recall, qps
+
+
+# ---------------------------------------------------------------------------
+# reward (§3.3)
+# ---------------------------------------------------------------------------
+def test_banded_auc_flat_curve():
+    """Constant QPS=100 across the band -> area = 100 * 0.10."""
+    pts = [(0.80, 100.0), (0.90, 100.0), (0.99, 100.0)]
+    auc, n = banded_auc(np.array([p[0] for p in pts]),
+                        np.array([p[1] for p in pts]))
+    np.testing.assert_allclose(auc, 100.0 * 0.10, rtol=1e-6)
+
+
+def test_banded_auc_excludes_outside_band():
+    """Points far outside [0.85, 0.95] must not change the area."""
+    base = [(0.85, 100.0), (0.95, 50.0)]
+    extra = base + [(0.10, 10000.0), (0.999, 1.0)]
+    a1, _ = banded_auc(np.array([p[0] for p in base]),
+                       np.array([p[1] for p in base]))
+    a2, _ = banded_auc(np.array([p[0] for p in extra]),
+                       np.array([p[1] for p in extra]))
+    np.testing.assert_allclose(a1, a2, rtol=1e-6)
+
+
+def test_banded_auc_no_points_in_reach():
+    auc, n = banded_auc(np.array([0.2, 0.4]), np.array([100.0, 50.0]))
+    assert auc == 0.0
+
+
+@given(n_examples=30, qmul=floats(0.2, 5.0))
+def test_reward_monotone_in_qps(qmul):
+    """Scaling QPS by c scales the AUC by c (reward monotone)."""
+    r = np.array([0.8, 0.88, 0.93, 0.97])
+    q = np.array([400.0, 300.0, 200.0, 100.0])
+    a1, _ = banded_auc(r, q)
+    a2, _ = banded_auc(r, q * qmul)
+    np.testing.assert_allclose(a2, a1 * qmul, rtol=1e-6)
+
+
+def test_speed_reward_baseline_is_one():
+    pts = [_Pt(0.86, 500.0), _Pt(0.92, 300.0), _Pt(0.96, 100.0)]
+    auc, _ = banded_auc(np.array([p.recall for p in pts]),
+                        np.array([p.qps for p in pts]))
+    res = speed_reward(pts, baseline_auc=auc)
+    np.testing.assert_allclose(res.rel, 1.0, rtol=1e-9)
+    np.testing.assert_allclose(res.reward, 1.0, rtol=1e-9)  # smooth(1)=1
+
+
+@given(n_examples=50, rel=floats(0.01, 10.0))
+def test_smooth_bounded_monotone(rel):
+    assert 0.0 < smooth(rel) < 2.0
+    assert smooth(rel * 1.1) > smooth(rel)
+
+
+# ---------------------------------------------------------------------------
+# exemplar DB (eq. 1)
+# ---------------------------------------------------------------------------
+def _prog(module, i=0):
+    return Program(module, tuple(i % len(ch) for _, ch in MODULES[module]))
+
+
+def test_eq1_probabilities():
+    db = ExemplarDB(tau=0.5)
+    scores = [1.0, 1.5, 0.5]
+    for i, s in enumerate(scores):
+        db.add(Program("search", (i % 3, i % 4)), s)
+    p = db.probabilities("search")
+    s = np.array(scores)
+    want = np.exp((s - s.mean()) / 0.5)
+    want /= want.sum()
+    np.testing.assert_allclose(p, want, rtol=1e-9)
+
+
+def test_db_rejects_zero_scores_and_dedups():
+    db = ExemplarDB()
+    db.add(_prog("search"), 0.0)
+    assert db.size("search") == 0
+    db.add(_prog("search"), 1.0)
+    db.add(_prog("search"), 1.4)          # same program, better score
+    assert db.size("search") == 1
+    assert db.best("search").score == 1.4
+
+
+@given(n_examples=10, tau=floats(0.05, 2.0), n=integers(3, 20))
+def test_db_sampling_prefers_high_scores(tau, n):
+    db = ExemplarDB(tau=tau)
+    rng = np.random.default_rng(0)
+    for i in range(n):
+        prog = Program("graph_construction",
+                       tuple(rng.integers(0, len(ch))
+                             for _, ch in MODULES["graph_construction"]))
+        db.add(prog, 0.1 + 0.1 * i)
+    p = db.probabilities("graph_construction")
+    # eq.(1) is monotone in score (dedup may merge equal programs)
+    scores = [e.score for e in db.entries["graph_construction"]]
+    order = np.argsort(scores)
+    assert (np.diff(p[order]) >= -1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# GRPO (eq. 2)
+# ---------------------------------------------------------------------------
+def test_group_advantages_normalised():
+    r = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    a = np.asarray(group_advantages(r))
+    np.testing.assert_allclose(a.mean(), 0.0, atol=1e-6)
+    np.testing.assert_allclose(a.std(), 1.0, atol=1e-3)
+
+
+def test_group_advantages_constant_rewards():
+    a = np.asarray(group_advantages(jnp.asarray([1.0, 1.0, 1.0])))
+    np.testing.assert_allclose(a, 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# prompt / program codec
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("module", MODULE_ORDER)
+def test_program_roundtrip(module):
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        prog = Program(module, tuple(int(rng.integers(0, len(ch)))
+                                     for _, ch in MODULES[module]))
+        toks = prompting.program_tokens(prog)
+        back = prompting.decode_program(module, toks)
+        assert back == prog
+
+
+def test_decode_rejects_malformed():
+    assert prompting.decode_program("search", [0, 0]) is None
+    assert prompting.decode_program("search", [prompting.BOS]) is None
+    toks = prompting.program_tokens(_prog("search"))
+    assert prompting.decode_program("search", toks[:-1]) is None
+
+
+def test_variant_roundtrip_through_program():
+    for module in MODULE_ORDER:
+        prog = program_from_variant(module, GLASS_BASELINE)
+        assert prog.apply_to(GLASS_BASELINE) == GLASS_BASELINE
+
+
+def test_prompt_structure():
+    ex = [(_prog("search"), 1.2), (_prog("search", 1), 0.7)]
+    toks = prompting.build_prompt("search", ex)
+    assert toks[0] == prompting.BOS
+    assert toks[1] == prompting.module_token("search")
+    assert toks[-1] == prompting.GEN
+    assert toks.count(prompting.EXEMPLAR) == 2
+    assert all(0 <= t < prompting.VOCAB_SIZE for t in toks)
+
+
+def test_grammar_masks_partition_vocab():
+    for module in MODULE_ORDER:
+        for pos in range(knob_count(module)):
+            m = prompting.valid_token_mask(module, pos)
+            name, choices = MODULES[module][pos]
+            assert m.sum() == len(choices)

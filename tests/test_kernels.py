@@ -1,0 +1,146 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp ref oracles
+(interpret mode executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.distance.ops import pairwise_distance
+from repro.kernels.distance.ref import distance_ref
+from repro.kernels.flash.ops import causal_attention
+from repro.kernels.flash.ref import flash_ref
+from repro.kernels.qdist.ops import quantize_int8, quantized_distance
+from repro.kernels.qdist.ref import qdist_ref
+from repro.kernels.topk.ops import topk_smallest
+from repro.kernels.topk.ref import topk_smallest_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# distance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nq,nx,d", [
+    (128, 256, 128), (100, 300, 96), (8, 1000, 25), (256, 512, 960),
+    (1, 128, 784), (17, 33, 100),
+])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_distance_matches_ref(nq, nx, d, metric):
+    q = jax.random.normal(KEY, (nq, d), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (nx, d), jnp.float32)
+    got = pairwise_distance(q, x, metric=metric)
+    want = distance_ref(q, x, metric)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_distance_dtypes(dtype):
+    q = jax.random.normal(KEY, (64, 128), dtype)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (128, 128), dtype)
+    got = pairwise_distance(q, x, metric="l2")
+    want = distance_ref(q, x, "l2")
+    tol = 1e-3 if dtype == jnp.float32 else 2.0
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=tol)
+
+
+def test_distance_l2_nonnegative_and_zero_diag():
+    x = jax.random.normal(KEY, (64, 32), jnp.float32)
+    d = pairwise_distance(x, x, metric="l2")
+    assert float(jnp.min(d)) > -1e-3
+    np.testing.assert_allclose(np.diag(np.asarray(d)), 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# topk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nq,nx,k", [
+    (8, 128, 10), (5, 1000, 32), (16, 333, 100), (1, 50, 5), (9, 2048, 64),
+])
+def test_topk_matches_ref(nq, nx, k):
+    d = jax.random.normal(KEY, (nq, nx), jnp.float32)
+    v1, i1 = topk_smallest(d, k)
+    v2, i2 = topk_smallest_ref(d, k)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_topk_sorted_ascending():
+    d = jax.random.normal(KEY, (8, 256), jnp.float32)
+    v, _ = topk_smallest(d, 16)
+    v = np.asarray(v)
+    assert (np.diff(v, axis=1) >= -1e-7).all()
+
+
+def test_topk_with_ties():
+    d = jnp.zeros((8, 64), jnp.float32).at[:, 10].set(-1.0)
+    v, i = topk_smallest(d, 3)
+    assert (np.asarray(i[:, 0]) == 10).all()
+    # remaining picks are the lowest indices among ties (stable)
+    assert (np.asarray(i[:, 1]) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# qdist
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nq,nx,d", [(16, 256, 128), (7, 300, 25),
+                                     (64, 128, 960)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_qdist_matches_ref(nq, nx, d, metric):
+    q = jax.random.normal(KEY, (nq, d), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (nx, d), jnp.float32)
+    xq, s = quantize_int8(x)
+    got = quantized_distance(q, xq, s, metric=metric)
+    want = qdist_ref(q, xq, s, metric)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-3)
+
+
+def test_quantization_error_bounded():
+    x = jax.random.normal(KEY, (128, 64), jnp.float32) * 3.0
+    xq, s = quantize_int8(x)
+    err = np.abs(np.asarray(xq, np.float32) * np.asarray(s)[:, None]
+                 - np.asarray(x))
+    # per-vector max error <= scale/2 (round-to-nearest)
+    assert (err <= np.asarray(s)[:, None] * 0.5 + 1e-6).all()
+
+
+def test_qdist_close_to_exact_distance():
+    q = jax.random.normal(KEY, (8, 128), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (64, 128), jnp.float32)
+    xq, s = quantize_int8(x)
+    approx = quantized_distance(q, xq, s, metric="l2")
+    exact = distance_ref(q, x, "l2")
+    rel = np.abs(np.asarray(approx) - np.asarray(exact)) / np.asarray(exact)
+    assert float(np.median(rel)) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,Hq,Hk,D,win,cap", [
+    (2, 256, 4, 2, 64, 0, 0.0),
+    (1, 256, 8, 8, 128, 0, 50.0),
+    (2, 256, 4, 1, 80, 128, 0.0),
+    (1, 512, 2, 2, 64, 0, 0.0),
+    (1, 128, 16, 4, 128, 64, 30.0),
+])
+def test_flash_matches_ref(B, S, Hq, Hk, D, win, cap):
+    q = jax.random.normal(KEY, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, Hk, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, Hk, D), jnp.float32)
+    got = causal_attention(q, k, v, q_scale=D ** -0.5, window=win, softcap=cap)
+    want = flash_ref(q, k, v, q_scale=D ** -0.5, window=win, softcap=cap)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_causality():
+    """Changing future kv must not change past outputs."""
+    B, S, H, D = 1, 256, 2, 64
+    q = jax.random.normal(KEY, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, H, D), jnp.float32)
+    o1 = causal_attention(q, k, v, q_scale=D ** -0.5)
+    k2 = k.at[:, S // 2:].set(0.0)
+    v2 = v.at[:, S // 2:].set(9.0)
+    o2 = causal_attention(q, k2, v2, q_scale=D ** -0.5)
+    np.testing.assert_allclose(o1[:, : S // 2], o2[:, : S // 2],
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the CRINN system: the contrastive-RL
+loop must produce a variant at least as fast as the GLASS baseline, with
+the exemplar DB accumulating scored implementations (the paper's core
+claim at smoke scale)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.anns import make_dataset
+from repro.anns.engine import GLASS_BASELINE
+from repro.configs import get_config
+from repro.core import CrinnOptimizer, LoopConfig, Policy
+from repro.core.prompting import VOCAB_SIZE
+from repro.core.variant_space import MODULE_ORDER
+from repro.models import Runtime, model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(
+        get_config("crinn-policy-100m"), num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=4, head_dim=32, d_ff=256, dtype="float32")
+    assert cfg.padded_vocab >= VOCAB_SIZE
+    rt = Runtime(mesh=None, attn_chunk=64, logit_chunk=64, remat="none")
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    policy = Policy(cfg, params, rt)
+    ds = make_dataset("sift-128-euclidean", n_base=2000, n_query=64)
+    return policy, ds
+
+
+def test_policy_rollouts_decode(setup):
+    policy, ds = setup
+    from repro.core import prompting
+    prompt = prompting.build_prompt("search", [])
+    rollouts = policy.sample_group("search", prompt, 4,
+                                   jax.random.PRNGKey(1))
+    assert len(rollouts) == 4
+    for ro in rollouts:
+        assert ro.program is not None          # grammar-constrained
+        assert ro.program.module == "search"
+        assert ro.mask.sum() == 2              # search has 2 knobs
+        assert np.isfinite(ro.logps).all()
+
+
+def test_crinn_loop_improves_or_matches_baseline(setup):
+    """One search-module optimization pass: the selected variant's reward
+    must be >= (baseline - noise); the DB must contain scored entries."""
+    policy, ds = setup
+    loop = LoopConfig(group_size=4, iterations_per_module=2,
+                      ef_sweep=(16, 24, 32, 48, 64), bench_repeats=1)
+    opt = CrinnOptimizer(policy, ds, loop)
+    variant = opt.run_module("search", verbose=False)
+    assert opt.db.size("search") >= 1
+    best = opt.db.best("search")
+    assert best.score >= 0.85            # within noise of baseline 1.0
+    assert opt.baseline_auc > 0
+    # history recorded per iteration (the paper's Table-4-style evidence)
+    assert len(opt.history) == 2
+    for rec in opt.history:
+        assert len(rec.rewards) == 4
+
+
+def test_progressive_module_order(setup):
+    """The driver optimizes modules in the paper's order (§3.1)."""
+    assert MODULE_ORDER == ("graph_construction", "search", "refinement")

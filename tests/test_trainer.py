@@ -1,0 +1,88 @@
+"""Trainer integration: fault injection + checkpoint/restore + exact
+deterministic replay."""
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.grpo import GRPOConfig
+from repro.data import PromptPipeline
+from repro.models import Runtime, model
+from repro.runtime import FailureInjector, Trainer, TrainerConfig
+
+
+def _tiny():
+    cfg = dataclasses.replace(
+        get_config("crinn-policy-100m"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128, dtype="float32")
+    rt = Runtime(mesh=None, attn_chunk=32, logit_chunk=32, remat="none")
+    return cfg, rt
+
+
+def test_failure_recovery_and_exact_replay():
+    cfg, rt = _tiny()
+    pipe = PromptPipeline(seq_len=64, global_batch=4)
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(total_steps=10, warmup_steps=2, ckpt_every=4,
+                             ckpt_dir=d)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        t1 = Trainer(cfg, rt, params, tcfg=tcfg, gcfg=GRPOConfig(),
+                     failure_injector=FailureInjector(fail_at_steps=(6,)))
+        log1 = t1.run(pipe.batch)
+        assert t1.step == 10
+        # the failure forced a rollback to step 4: step 4/5 appear twice;
+        # replayed losses must match exactly (determinism)
+        by_step = {}
+        for rec in log1:
+            by_step.setdefault(rec["step"], []).append(rec["loss"])
+        assert len(by_step[4]) == 2
+        np.testing.assert_allclose(by_step[4][0], by_step[4][1], rtol=1e-6)
+
+
+def test_resume_from_checkpoint_continues():
+    cfg, rt = _tiny()
+    pipe = PromptPipeline(seq_len=64, global_batch=4)
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(total_steps=8, warmup_steps=2, ckpt_every=4,
+                             ckpt_dir=d)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        t1 = Trainer(cfg, rt, params, tcfg=tcfg, gcfg=GRPOConfig())
+        t1.run(pipe.batch, steps=8)
+        t1.ckpt.wait()
+        # a "new process": fresh trainer, restore, continue
+        t2 = Trainer(cfg, rt, model.init_params(jax.random.PRNGKey(9), cfg),
+                     tcfg=tcfg, gcfg=GRPOConfig())
+        assert t2.try_restore()
+        assert t2.step == 8
+        t2.run(pipe.batch, steps=2)
+        assert t2.step == 10
+
+
+def test_lm_loss_decreases_on_structured_data():
+    """End-to-end sanity: CE training on the bigram-structured pipeline
+    actually learns (loss drops vs step 0)."""
+    from repro.data import TokenPipeline
+    from repro.models.model import lm_loss
+
+    cfg, rt = _tiny()
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=64,
+                         global_batch=8)
+
+    def loss_fn(p, batch):
+        return lm_loss(p, batch, cfg, rt)
+
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(total_steps=30, warmup_steps=3, ckpt_every=1000,
+                             ckpt_dir=d)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        from repro.optim.adamw import AdamWConfig
+        tr = Trainer(cfg, rt, params, tcfg=tcfg,
+                     opt_cfg=AdamWConfig(lr=3e-3, weight_decay=0.0),
+                     loss_fn=loss_fn)
+        log = tr.run(lambda s: {"tokens": pipe.batch(s)}, steps=30)
+        first = np.mean([r["loss"] for r in log[:3]])
+        last = np.mean([r["loss"] for r in log[-3:]])
+        assert last < first - 0.2, (first, last)
