@@ -4,8 +4,8 @@ container: no plotting) suitable for an ann-benchmarks-style plot."""
 from __future__ import annotations
 
 from benchmarks.common import CRINN_DISCOVERED, csv_row
-from repro.anns import Engine, make_dataset
-from repro.anns.bench import qps_recall_curve
+from repro.anns import Engine, SearchParams, make_dataset, registry
+from repro.anns.bench import measure_point, qps_recall_curve
 from repro.anns.engine import GLASS_BASELINE
 
 EF_SWEEP = (10, 16, 24, 32, 48, 64, 96, 128, 192)
@@ -21,12 +21,22 @@ def run(datasets=("sift-128-euclidean",), n_base: int = 5000,
             eng = Engine(variant, metric=ds.metric)
             eng.build_index(ds.base)
             for p in qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP,
-                                      repeats=repeats):
+                                      repeats=repeats,
+                                      base_params=SearchParams(k=10)):
                 rows.append({"dataset": name, "impl": label, "ef": p.ef,
                              "recall": p.recall, "qps": p.qps})
                 print(csv_row(f"fig1/{name}/{label}/ef{p.ef}",
                               p.p50_ms * 1e3,
                               f"recall={p.recall:.3f};qps={p.qps:.0f}"))
+        # exact brute-force anchor: where recall=1.0 sits on the QPS axis
+        exact = registry.create("brute_force", metric=ds.metric)
+        exact.build(ds.base)
+        p = measure_point(exact, ds, params=SearchParams(k=10),
+                          repeats=repeats)
+        rows.append({"dataset": name, "impl": "exact", "ef": 0,
+                     "recall": p.recall, "qps": p.qps})
+        print(csv_row(f"fig1/{name}/exact", p.p50_ms * 1e3,
+                      f"recall={p.recall:.3f};qps={p.qps:.0f}"))
     return rows
 
 

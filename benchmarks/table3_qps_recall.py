@@ -1,52 +1,98 @@
 """Paper Table 3: QPS at fixed recall levels, CRINN-optimized variant vs
 the GLASS baseline (the paper's RL starting point), per dataset.
 
+Any backend registered in ``repro.anns.registry`` can be swept by name:
+
+    PYTHONPATH=src python benchmarks/table3_qps_recall.py \
+        --backends graph,quantized_prefilter,brute_force
+
+``brute_force`` is exact, so it contributes a single recall=1.0 anchor
+curve instead of a glass/crinn pair.
+
 Offline scaling: synthetic matched-dimension datasets at reduced N (the
 container's CPU plays the benchmark machine); the comparison structure —
 same datasets, same recall targets, QPS ratio — mirrors the paper's table.
 """
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import dataclasses
 
 from benchmarks.common import CRINN_DISCOVERED, csv_row
-from repro.anns import Engine, make_dataset
-from repro.anns.bench import qps_at_recall, qps_recall_curve
+from repro.anns import Engine, SearchParams, make_dataset
+from repro.anns.bench import measure_point, qps_at_recall, qps_recall_curve
 from repro.anns.engine import GLASS_BASELINE
 
 RECALL_TARGETS = (0.90, 0.95, 0.99)
 EF_SWEEP = (16, 24, 32, 48, 64, 96, 128, 192)
 
 
+def _curve(variant, backend, ds, repeats):
+    eng = Engine(dataclasses.replace(variant, backend=backend),
+                 metric=ds.metric)
+    eng.build_index(ds.base)
+    return qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP, repeats=repeats,
+                            base_params=SearchParams(k=10))
+
+
 def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                   "glove-25-angular"),
-        n_base: int = 5000, n_query: int = 100, repeats: int = 2):
+        n_base: int = 5000, n_query: int = 100, repeats: int = 2,
+        backends=("graph",)):
     rows = []
     for name in datasets:
         ds = make_dataset(name, n_base=n_base, n_query=n_query)
-        curves = {}
-        for label, variant in (("glass", GLASS_BASELINE),
-                               ("crinn", CRINN_DISCOVERED)):
-            eng = Engine(variant, metric=ds.metric)
-            eng.build_index(ds.base)
-            curves[label] = qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP,
-                                             repeats=repeats)
-        for r in RECALL_TARGETS:
-            qb = qps_at_recall(curves["glass"], r)
-            qc = qps_at_recall(curves["crinn"], r)
-            if qb is None and qc is None:
+        for backend in backends:
+            if backend == "brute_force":
+                # exact and ef-free: one anchor point, recall pinned at 1.0
+                eng = Engine(dataclasses.replace(GLASS_BASELINE,
+                                                 backend=backend),
+                             metric=ds.metric)
+                eng.build_index(ds.base)
+                best = measure_point(eng, ds, params=SearchParams(k=10),
+                                     repeats=repeats).qps
+                rows.append({"dataset": name, "backend": backend,
+                             "recall": 1.0, "crinn_qps": best,
+                             "glass_qps": None,
+                             "improvement_pct": float("nan")})
+                print(csv_row(f"table3/{name}/{backend}/exact",
+                              1e6 / best, f"qps={best:.0f};recall=1.000"))
                 continue
-            imp = (100.0 * (qc - qb) / qb) if (qb and qc) else float("nan")
-            rows.append({
-                "dataset": name, "recall": r,
-                "crinn_qps": qc, "glass_qps": qb, "improvement_pct": imp,
-            })
-            us = 1e6 / qc if qc else float("nan")
-            print(csv_row(f"table3/{name}/r{r:.2f}", us,
-                          f"crinn_qps={qc and round(qc)};glass_qps={qb and round(qb)};"
-                          f"improvement={imp:+.1f}%"))
+            curves = {
+                "glass": _curve(GLASS_BASELINE, backend, ds, repeats),
+                "crinn": _curve(CRINN_DISCOVERED, backend, ds, repeats),
+            }
+            for r in RECALL_TARGETS:
+                qb = qps_at_recall(curves["glass"], r)
+                qc = qps_at_recall(curves["crinn"], r)
+                if qb is None and qc is None:
+                    continue
+                imp = (100.0 * (qc - qb) / qb) if (qb and qc) else float("nan")
+                rows.append({
+                    "dataset": name, "backend": backend, "recall": r,
+                    "crinn_qps": qc, "glass_qps": qb, "improvement_pct": imp,
+                })
+                us = 1e6 / qc if qc else float("nan")
+                print(csv_row(
+                    f"table3/{name}/{backend}/r{r:.2f}", us,
+                    f"crinn_qps={qc and round(qc)};glass_qps={qb and round(qb)};"
+                    f"improvement={imp:+.1f}%"))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default="graph",
+                    help="comma-separated registry names to sweep")
+    ap.add_argument("--n-base", type=int, default=5000)
+    ap.add_argument("--n-query", type=int, default=100)
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args()
+    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
+    from repro.anns import registry
+    for b in backends:
+        if b not in registry.available():
+            ap.error(f"unknown backend {b!r}; registered: "
+                     f"{registry.available()}")
+    run(n_base=args.n_base, n_query=args.n_query, repeats=args.repeats,
+        backends=backends)

@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import STAGE_VARIANTS, csv_row
-from repro.anns import Engine, make_dataset
+from repro.anns import Engine, SearchParams, make_dataset
 from repro.anns.bench import qps_at_recall, qps_recall_curve
 
 RECALL_TARGETS = (0.90, 0.95)
@@ -24,7 +24,8 @@ def run(datasets=("sift-128-euclidean", "glove-25-angular"),
             eng = Engine(STAGE_VARIANTS[stage], metric=ds.metric)
             eng.build_index(ds.base)
             curve = qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP,
-                                     repeats=repeats)
+                                     repeats=repeats,
+                                     base_params=SearchParams(k=10))
             vals = [qps_at_recall(curve, r) for r in RECALL_TARGETS]
             vals = [v for v in vals if v]
             qps_by_stage[stage] = float(np.mean(vals)) if vals else None

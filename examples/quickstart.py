@@ -1,4 +1,5 @@
-"""Quickstart: build a TPU-native ANNS index, search it, and run one
+"""Quickstart: build a TPU-native ANNS index, search it through the
+backend registry, anchor it against exact brute force, and run one
 contrastive-RL iteration over the search module.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -9,7 +10,7 @@ import time
 import jax
 import numpy as np
 
-from repro.anns import Engine, make_dataset
+from repro.anns import Engine, SearchParams, make_dataset, registry
 from repro.anns.datasets import recall_at_k
 from repro.anns.engine import GLASS_BASELINE
 
@@ -18,25 +19,35 @@ def main():
     # --- 1. data + index -------------------------------------------------
     ds = make_dataset("sift-128-euclidean", n_base=3000, n_query=64)
     print(f"dataset: {ds.base.shape[0]} base vectors, dim {ds.base.shape[1]}")
+    print(f"registered backends: {registry.available()}")
 
     variant = dataclasses.replace(GLASS_BASELINE, alpha=1.2,
                                   num_entry_points=3)
     eng = Engine(variant, metric=ds.metric)
     t0 = time.time()
     eng.build_index(ds.base)
-    print(f"index built in {time.time()-t0:.1f}s  ({variant.describe()})")
+    print(f"index built in {time.time()-t0:.1f}s  ({variant.describe()}, "
+          f"{eng.memory_bytes()/1e6:.1f} MB)")
 
-    # --- 2. search --------------------------------------------------------
+    # --- 2. exact anchor: the brute-force Pallas backend -----------------
+    exact = registry.create("brute_force", metric=ds.metric)
+    exact.build(ds.base)
+    res = exact.search(ds.queries, SearchParams(k=10))
+    print(f"brute-force anchor: recall@10="
+          f"{recall_at_k(np.asarray(res.ids), ds.gt, 10):.3f} (exact)")
+
+    # --- 3. graph search across the ef sweep ------------------------------
     for ef in (16, 48, 96):
+        params = SearchParams(k=10, ef=ef)
         t0 = time.time()
-        ids, dists = eng.search(ds.queries, k=10, ef=ef)
-        jax.block_until_ready(ids)
+        res = eng.query(ds.queries, params)
+        jax.block_until_ready(res.ids)
         dt = time.time() - t0
-        rec = recall_at_k(np.asarray(ids), ds.gt, 10)
+        rec = recall_at_k(np.asarray(res.ids), ds.gt, 10)
         print(f"ef={ef:3d}: recall@10={rec:.3f}  "
-              f"qps={len(ds.queries)/dt:,.0f}")
+              f"qps={len(ds.queries)/dt:,.0f}  steps={int(res.steps)}")
 
-    # --- 3. one CRINN RL iteration over the search module ------------------
+    # --- 4. one CRINN RL iteration over the search module ------------------
     from repro.configs import get_config
     from repro.core import CrinnOptimizer, LoopConfig, Policy
     from repro.models import Runtime, model

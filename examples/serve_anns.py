@@ -1,11 +1,13 @@
 """Serve a CRINN-optimized ANNS index with dynamic request batching —
 the deployment scenario the paper motivates (RAG / agent retrieval).
+Requests carry heterogeneous ``k``; the server searches each batch at the
+largest requested k and slices per response.
 
     PYTHONPATH=src python examples/serve_anns.py
 """
 import numpy as np
 
-from repro.anns import Engine, make_dataset
+from repro.anns import Engine, SearchParams, make_dataset
 from repro.anns.datasets import recall_at_k
 from benchmarks.common import CRINN_DISCOVERED
 from repro.runtime.server import AnnsServer
@@ -17,15 +19,17 @@ def main():
     print("building CRINN-optimized index ...")
     eng.build_index(ds.base)
 
-    server = AnnsServer(eng, max_batch=32, ef=64, k=10)
+    server = AnnsServer(eng, max_batch=32,
+                        params=SearchParams(k=10, ef=64))
     rng = np.random.default_rng(0)
     order = rng.integers(0, len(ds.queries), size=200)
-    for i in order:
-        server.submit(ds.queries[i])
+    for j, i in enumerate(order):
+        # every 8th request wants a deeper result list than the default
+        server.submit(ds.queries[i], k=20 if j % 8 == 0 else 10)
     responses = server.run()
 
     lat = np.array([r.latency_ms for r in responses])
-    found = np.stack([r.ids for r in responses])
+    found = np.stack([r.ids[:10] for r in responses])
     rec = recall_at_k(found, ds.gt[order], 10)
     print(f"served {len(responses)} requests in "
           f"{server.served / (lat.max()/1e3):,.0f} QPS aggregate")

@@ -1,12 +1,37 @@
 """TPU-native ANNS engine (the substrate CRINN's contrastive RL optimizes).
 
-GLASS/HNSW-family design adapted to TPU (DESIGN.md §2): flat fixed-degree
-graph, batched NN-descent + alpha-prune construction, lockstep batched beam
-search, int8 quantized refinement.  Every optimization knob the paper's RL
-discovered (§6) is a field of :class:`repro.anns.engine.VariantConfig` —
-the action space of the policy.
+The package is organized around a pluggable backend protocol:
+
+- :class:`repro.anns.api.AnnsIndex` — the structural interface
+  (``build`` / ``search`` / ``memory_bytes`` / ``to_state_dict`` /
+  ``from_state_dict``) every algorithm family implements.
+- :mod:`repro.anns.registry` — string-keyed backend registry.  Built-ins:
+  ``"graph"`` (flat fixed-degree graph + lockstep batched beam search,
+  the GLASS/HNSW-family design of DESIGN.md §2), ``"brute_force"``
+  (exact search through the Pallas distance/top-k kernels — the
+  recall=1.0 anchor), and ``"quantized_prefilter"`` (int8 prefilter +
+  fp32 rerank as a composable stage).
+- :class:`repro.anns.api.SearchParams` / ``SearchResult`` — the typed
+  request/response structs threaded through bench, serving, and the RL
+  loop in place of per-layer kwargs.
+- :class:`repro.anns.engine.Engine` — thin compatibility facade;
+  ``Engine(variant)`` constructs the backend named by
+  ``VariantConfig.backend``.
+
+Every optimization knob the paper's RL discovered (§6) is a field of
+:class:`repro.anns.engine.VariantConfig` — the action space of the
+policy; ``backend`` selects the algorithm family itself.
+
+Adding a backend: subclass nothing — implement the protocol, decorate
+with ``@repro.anns.registry.register("name")``, and every layer
+(benchmarks, server, RL loop) can select it by name.  See
+``repro/anns/registry.py`` for a worked example.
 """
+from repro.anns.api import AnnsIndex, SearchParams, SearchResult
 from repro.anns.engine import Engine, VariantConfig
 from repro.anns.datasets import Dataset, make_dataset, DATASET_SPECS
+from repro.anns import registry
 
-__all__ = ["Engine", "VariantConfig", "Dataset", "make_dataset", "DATASET_SPECS"]
+__all__ = ["AnnsIndex", "SearchParams", "SearchResult", "Engine",
+           "VariantConfig", "Dataset", "make_dataset", "DATASET_SPECS",
+           "registry"]

@@ -1,0 +1,180 @@
+"""The ANNS backend API: typed search parameters + the ``AnnsIndex`` protocol.
+
+CRINN treats the ANNS implementation as a *search space* — the RL loop
+mutates variants and rewards wall-clock QPS at fixed recall — so the
+engine must be able to swap whole algorithm families behind one interface
+(the ann-benchmarks lesson) and expose a *typed* parameter space the
+optimizer can enumerate (the ScaNN auto-configuration lesson).
+
+Three pieces:
+
+- :class:`SearchParams` — one frozen struct replacing the ``ef`` / ``k`` /
+  ``gather_width`` / ``patience`` / ``quantized`` / ``rerank`` kwarg soup
+  that previously leaked through four layers.  Backend-specific knobs
+  default to ``None`` = "use the backend's variant config"; the resolved
+  defaults reproduce the legacy kwarg defaults bit-for-bit.
+- :class:`SearchResult` — ids/dists plus traversal telemetry.
+- :class:`AnnsIndex` — the structural protocol every backend implements.
+  Backends register under a string key in :mod:`repro.anns.registry`;
+  ``VariantConfig.backend`` selects one, which grows the RL action space
+  beyond graph knobs.
+
+Jit-hygiene helpers live here too: :func:`round_ef` / :func:`round_steps`
+snap derived integer knobs onto small static ladders so an
+(``ef``, ``target_recall``) sweep reuses a handful of compiled traces
+instead of tracing once per arbitrary integer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# static ladders (jit-recompilation hygiene)
+# ---------------------------------------------------------------------------
+
+# Geometric ~1.5x ladder covering every sweep value the benchmarks use.
+# Derived efs (adaptive-EF scaling produces arbitrary ints) snap up to the
+# next rung, so a (ef, target_recall) sweep hits O(ladder) traces, not
+# O(pairs).
+EF_LADDER = (8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
+
+# max_steps is a static argname of the jitted beam search; bucket it the
+# same way (the while_loop exits early via the active mask, so a larger
+# cap never changes results of a converged search).
+STEP_LADDER = (16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024)
+
+
+def round_ef(ef: int) -> int:
+    """Smallest ladder rung >= ef (multiples of 128 past the ladder)."""
+    for v in EF_LADDER:
+        if ef <= v:
+            return v
+    return ((ef + 127) // 128) * 128
+
+
+def round_steps(steps: int) -> int:
+    """Smallest step-ladder rung >= steps (multiples of 256 past it)."""
+    for v in STEP_LADDER:
+        if steps <= v:
+            return v
+    return ((steps + 255) // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# parameter / result structs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SearchParams:
+    """One search request: what to retrieve and how hard to try.
+
+    ``k`` / ``ef`` / ``target_recall`` are universal; the remaining fields
+    are graph-family knobs that default to ``None`` meaning "take the value
+    from the backend's :class:`~repro.anns.engine.VariantConfig`".  With no
+    variant either (``resolved(None)``) they fall back to the historical
+    ``repro.anns.search.search`` kwarg defaults.
+    """
+    k: int = 10
+    ef: int = 64
+    target_recall: float = 0.0
+    gather_width: Optional[int] = None
+    patience: Optional[int] = None
+    quantized: Optional[bool] = None
+    rerank_factor: Optional[int] = None
+
+    # legacy kwarg defaults of repro.anns.search.search (pre-registry API)
+    _FALLBACK = {"gather_width": 1, "patience": 0, "quantized": False,
+                 "rerank_factor": 2}
+
+    def resolved(self, variant=None) -> "SearchParams":
+        """Fill ``None`` fields from ``variant`` (or legacy defaults)."""
+        updates = {}
+        for name in ("gather_width", "patience", "quantized", "rerank_factor"):
+            if getattr(self, name) is not None:
+                continue
+            if variant is not None:
+                vname = {"quantized": "quantized_prefilter"}.get(name, name)
+                updates[name] = getattr(variant, vname)
+            else:
+                updates[name] = self._FALLBACK[name]
+        return dataclasses.replace(self, **updates) if updates else self
+
+    def replace(self, **overrides) -> "SearchParams":
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclass(frozen=True)
+class SearchResult:
+    """Batched k-NN answer plus traversal telemetry.
+
+    ``steps`` / ``expansions`` are 0 for single-shot (non-iterative)
+    backends such as brute force.
+    """
+    ids: jax.Array          # (B, k) int32
+    dists: jax.Array        # (B, k) fp32, ascending
+    steps: Any = 0          # while-loop iterations (scalar)
+    expansions: Any = 0     # total beam expansions (scalar)
+    backend: str = ""
+
+    @property
+    def k(self) -> int:
+        return int(self.ids.shape[-1])
+
+
+def effective_ef(ef: int, target_recall: float, adaptive_coef: float,
+                 critical: float = 0.9) -> int:
+    """Paper §6.1 dynamic-EF scaling: widen the beam above a critical
+    recall target.  Callers on the hot path should snap the result with
+    :func:`round_ef` — this function returns the raw scaled value."""
+    if adaptive_coef > 0 and target_recall > critical:
+        excess = target_recall - critical
+        return int(ef * (1.0 + excess * adaptive_coef))
+    return ef
+
+
+# ---------------------------------------------------------------------------
+# backend protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class AnnsIndex(Protocol):
+    """Structural interface every registered backend implements.
+
+    Lifecycle: construct with a ``VariantConfig`` (or ``None`` for backend
+    defaults), ``build(base)`` once, then ``search(queries, params)`` any
+    number of times.  ``to_state_dict``/``from_state_dict`` round-trip the
+    built state through plain numpy for checkpointing / shipping to
+    another host.
+
+    ``index`` holds the built state (``None`` before ``build``).  It is
+    part of the protocol because the Engine facade and the RL index cache
+    share/patch built state through it.
+    """
+
+    name: str
+    index: Any
+
+    def build(self, base: np.ndarray) -> Any:
+        """Build index state from (N, d) base vectors; returns the state."""
+        ...
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        """Batched k-NN over (B, d) queries."""
+        ...
+
+    def memory_bytes(self) -> int:
+        """Resident bytes of the built index state."""
+        ...
+
+    def to_state_dict(self) -> dict:
+        """Serializable (numpy) snapshot of the built state."""
+        ...
+
+    def from_state_dict(self, state: dict) -> None:
+        """Restore a snapshot produced by :meth:`to_state_dict`."""
+        ...

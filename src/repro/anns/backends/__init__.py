@@ -1,0 +1,14 @@
+"""Built-in :class:`repro.anns.api.AnnsIndex` backends.
+
+Importing this package registers all built-ins with
+:mod:`repro.anns.registry` (each module's ``@register`` decorator runs at
+import).  The registry imports this package lazily, so user code normally
+never needs to import it directly — ``registry.create("graph")`` is
+enough.
+"""
+from repro.anns.backends.graph_beam import GraphBeamBackend
+from repro.anns.backends.brute_force import BruteForceBackend
+from repro.anns.backends.quantized import QuantizedPrefilterBackend
+
+__all__ = ["GraphBeamBackend", "BruteForceBackend",
+           "QuantizedPrefilterBackend"]

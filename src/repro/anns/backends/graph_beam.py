@@ -1,0 +1,102 @@
+"""``"graph"`` backend: lockstep batched beam search over the flat
+fixed-degree graph — the seed engine's algorithm behind the
+:class:`~repro.anns.api.AnnsIndex` protocol, behavior unchanged.
+
+The variant's search-module knobs (``gather_width``, ``patience``,
+``quantized_prefilter``, ``rerank_factor``) act as defaults that a
+:class:`~repro.anns.api.SearchParams` can override per call.  Adaptive-EF
+scaling (§6.1) resolves here: the scaled beam width snaps onto the static
+:data:`~repro.anns.api.EF_LADDER` so a ``target_recall`` sweep reuses a
+handful of jit traces instead of retracing per arbitrary integer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import construction, search as search_lib
+from repro.anns.api import (SearchParams, SearchResult, effective_ef,
+                            round_ef)
+from repro.anns.graph import GraphIndex
+from repro.anns.registry import register
+
+
+def _array_bytes(*arrays) -> int:
+    return sum(a.size * a.dtype.itemsize for a in arrays if a is not None)
+
+
+@register("graph")
+class GraphBeamBackend:
+    name = "graph"
+
+    def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
+        if variant is None:
+            from repro.anns.engine import VariantConfig
+            variant = VariantConfig()
+        self.variant = variant
+        self.metric = metric
+        self.seed = seed
+        self.index: GraphIndex | None = None
+
+    # -- AnnsIndex protocol ------------------------------------------------
+    def build(self, base: np.ndarray) -> GraphIndex:
+        v = self.variant
+        self.index = construction.build_graph(
+            base, metric=self.metric, degree=v.degree,
+            ef_construction=v.ef_construction, rounds=v.nn_descent_rounds,
+            alpha=v.alpha, num_entry_points=v.num_entry_points,
+            quantize=self._build_quantized(), seed=self.seed)
+        return self.index
+
+    def _build_quantized(self) -> bool:
+        return bool(self.variant.quantized_prefilter)
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        assert self.index is not None, "build() first"
+        p = params.resolved(self.variant)
+        ef = effective_ef(p.ef, p.target_recall, self.variant.adaptive_ef_coef)
+        if ef != p.ef:
+            ef = round_ef(ef)      # derived ef -> static ladder (jit hygiene)
+        ids, dists, steps, exps = search_lib.search(
+            self.index, jnp.asarray(queries, jnp.float32),
+            ef=ef, k=p.k, gather_width=p.gather_width, patience=p.patience,
+            quantized=p.quantized, rerank=p.rerank_factor)
+        return SearchResult(ids=ids, dists=dists, steps=steps,
+                            expansions=exps, backend=self.name)
+
+    def memory_bytes(self) -> int:
+        idx = self.index
+        if idx is None:
+            return 0
+        return _array_bytes(idx.neighbors, idx.entry_points, idx.base,
+                            idx.degrees, idx.base_q, idx.scales)
+
+    def to_state_dict(self) -> dict:
+        idx = self.index
+        assert idx is not None, "build() first"
+        state = {
+            "backend": self.name,
+            "metric": idx.metric,
+            "neighbors": np.asarray(idx.neighbors),
+            "entry_points": np.asarray(idx.entry_points),
+            "base": np.asarray(idx.base),
+            "degrees": np.asarray(idx.degrees),
+        }
+        if idx.base_q is not None:
+            state["base_q"] = np.asarray(idx.base_q)
+            state["scales"] = np.asarray(idx.scales)
+        return state
+
+    def from_state_dict(self, state: dict) -> None:
+        self.metric = state["metric"]
+        self.index = GraphIndex(
+            neighbors=jnp.asarray(state["neighbors"]),
+            entry_points=jnp.asarray(state["entry_points"]),
+            base=jnp.asarray(state["base"]),
+            degrees=jnp.asarray(state["degrees"]),
+            metric=state["metric"],
+            base_q=(jnp.asarray(state["base_q"])
+                    if "base_q" in state else None),
+            scales=(jnp.asarray(state["scales"])
+                    if "scales" in state else None))

@@ -1,0 +1,69 @@
+"""``"quantized_prefilter"`` backend: int8 prefilter + fp32 rerank as a
+composable stage (paper §2.3/§6.3 asymmetric-distance refinement).
+
+The seed fused this path into ``_beam_search`` behind a ``quantized``
+flag; here it is lifted into its own backend: an inner *candidate
+generator* (the quantized graph traversal) produces ``rerank_factor * k``
+candidates, and a standalone jitted fp32 rerank re-scores them.  The
+rerank stage is generic — it works over any candidate id matrix, so
+future backends (IVF shortlists, sharded merges) can reuse it verbatim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import search as search_lib
+from repro.anns.api import (SearchParams, SearchResult, effective_ef,
+                            round_ef)
+from repro.anns.backends.graph_beam import GraphBeamBackend
+from repro.anns.registry import register
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def fp32_rerank(base, queries, cand_ids, *, k: int, metric: str):
+    """Re-score (B, M) candidate ids in fp32 and keep the best k.
+
+    Candidate order does not matter; duplicates are fine (set-recall is
+    unaffected and ties keep the first occurrence).
+    """
+    q32 = queries.astype(jnp.float32)
+    d = search_lib._qdist(q32, base[cand_ids], metric)
+    nd, order = jax.lax.top_k(-d, k)
+    ids = jnp.take_along_axis(cand_ids, order, axis=1)
+    return ids, -nd
+
+
+@register("quantized_prefilter")
+class QuantizedPrefilterBackend(GraphBeamBackend):
+    name = "quantized_prefilter"
+
+    # always build the int8 codes, whatever the variant says — they are
+    # this backend's whole point.
+    def _build_quantized(self) -> bool:
+        return True
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        assert self.index is not None, "build() first"
+        assert self.index.base_q is not None, "index built without codes"
+        p = params.resolved(self.variant)
+        ef = effective_ef(p.ef, p.target_recall, self.variant.adaptive_ef_coef)
+        if ef != p.ef:
+            ef = round_ef(ef)
+        # stage 1: traversal emits the rerank shortlist — int8 by default
+        # (this backend's point), fp32 when the caller explicitly overrides
+        # quantized=False (explicit params win over the backend default)
+        prefilter_q = True if params.quantized is None else bool(params.quantized)
+        m = max(p.k, min(max(p.rerank_factor, 1) * p.k, max(ef, p.k)))
+        q = jnp.asarray(queries, jnp.float32)
+        cand, _, steps, exps = search_lib.search(
+            self.index, q, ef=ef, k=m, gather_width=p.gather_width,
+            patience=p.patience, quantized=prefilter_q, rerank=0)
+        # stage 2: standalone fp32 rerank
+        ids, dists = fp32_rerank(self.index.base, q, cand, k=p.k,
+                                 metric=self.metric)
+        return SearchResult(ids=ids, dists=dists, steps=steps,
+                            expansions=exps, backend=self.name)

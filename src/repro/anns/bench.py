@@ -3,9 +3,15 @@
 Wall-clock QPS is measured on the jitted search with ``block_until_ready``
 — a *real* execution-speed signal, exactly the reward the paper trains on
 (this container's CPU plays the role of the paper's benchmark machine).
+
+Measurement targets are anything implementing the
+:class:`~repro.anns.api.AnnsIndex` protocol; an
+:class:`~repro.anns.engine.Engine` facade is unwrapped automatically, so
+both the legacy and the registry-first call styles work.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 
@@ -13,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.anns.api import SearchParams
 from repro.anns.datasets import Dataset, recall_at_k
 from repro.anns.engine import Engine
 
@@ -23,36 +30,63 @@ class CurvePoint:
     qps: float
     recall: float
     p50_ms: float
+    backend: str = ""
 
 
 DEFAULT_EF_SWEEP = (10, 16, 24, 32, 48, 64, 96, 128, 192, 256)
 
 
-def measure_point(engine: Engine, ds: Dataset, *, ef: int, k: int = 10,
-                  repeats: int = 3, target_recall: float = 0.0) -> CurvePoint:
+def _backend_of(target):
+    """Accept an Engine facade or a bare AnnsIndex backend."""
+    return target.backend if isinstance(target, Engine) else target
+
+
+def measure_point(target, ds: Dataset, *, params: SearchParams | None = None,
+                  ef: int | None = None, k: int | None = None,
+                  repeats: int = 3,
+                  target_recall: float | None = None) -> CurvePoint:
+    """Time one operating point.  Pass ``params`` (preferred) or the
+    legacy ``ef``/``k``/``target_recall`` kwargs — not both."""
+    backend = _backend_of(target)
+    legacy = dict(ef=ef, k=k, target_recall=target_recall)
+    if params is None:
+        params = SearchParams(k=k if k is not None else 10,
+                              ef=ef if ef is not None else 64,
+                              target_recall=target_recall or 0.0)
+    elif any(v is not None for v in legacy.values()):
+        given = [n for n, v in legacy.items() if v is not None]
+        raise ValueError(
+            f"pass either params or legacy kwargs, not both (got {given})")
     q = jnp.asarray(ds.queries, jnp.float32)
     # warmup / compile
-    ids, _ = engine.search(q, k=k, ef=ef, target_recall=target_recall)
-    jax.block_until_ready(ids)
+    res = backend.search(q, params)
+    jax.block_until_ready(res.ids)
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        ids, _ = engine.search(q, k=k, ef=ef, target_recall=target_recall)
-        jax.block_until_ready(ids)
+        res = backend.search(q, params)
+        jax.block_until_ready(res.ids)
         times.append(time.perf_counter() - t0)
     t = float(np.median(times))
-    rec = recall_at_k(np.asarray(ids), ds.gt, k)
-    return CurvePoint(ef=ef, qps=len(ds.queries) / t, recall=rec,
-                      p50_ms=1e3 * t / len(ds.queries))
+    rec = recall_at_k(np.asarray(res.ids), ds.gt, params.k)
+    return CurvePoint(ef=params.ef, qps=len(ds.queries) / t, recall=rec,
+                      p50_ms=1e3 * t / len(ds.queries),
+                      backend=getattr(backend, "name", ""))
 
 
-def qps_recall_curve(engine: Engine, ds: Dataset, *, k: int = 10,
-                     ef_sweep=DEFAULT_EF_SWEEP, repeats: int = 3) -> list[CurvePoint]:
+def qps_recall_curve(target, ds: Dataset, *, k: int | None = None,
+                     ef_sweep=DEFAULT_EF_SWEEP, repeats: int = 3,
+                     base_params: SearchParams | None = None) -> list[CurvePoint]:
+    """Sweep ``ef``; ``base_params`` carries every other knob (mutually
+    exclusive with the legacy ``k`` kwarg)."""
+    if base_params is not None and k is not None:
+        raise ValueError("pass either base_params or k, not both")
+    base = base_params or SearchParams(k=k if k is not None else 10)
     pts = []
     for ef in ef_sweep:
         tr = 0.95 if ef >= 96 else 0.0   # adaptive-EF variants engage high-recall mode
-        pts.append(measure_point(engine, ds, ef=ef, k=k, repeats=repeats,
-                                 target_recall=tr))
+        p = dataclasses.replace(base, ef=ef, target_recall=tr)
+        pts.append(measure_point(target, ds, params=p, repeats=repeats))
     return pts
 
 

@@ -4,23 +4,31 @@ A :class:`VariantConfig` is one "implementation variant" in CRINN terms:
 the decoded output of a policy completion (see ``repro.core.variant_space``)
 and the unit the speed reward evaluates.  Field groups correspond to the
 paper's three sequentially-optimized modules (§3.1): graph construction,
-search, refinement.
+search, refinement — plus ``backend``, which selects a whole algorithm
+family from :mod:`repro.anns.registry` (the axis that grows the action
+space beyond graph knobs).
+
+:class:`Engine` is a thin compatibility facade over the backend protocol:
+``Engine(variant).build_index(base)`` then ``search(queries, k=…, ef=…)``
+keeps working exactly as before, while new code talks to the backend
+directly with :class:`~repro.anns.api.SearchParams` /
+:class:`~repro.anns.api.SearchResult`.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.anns import construction, search as search_lib
-from repro.anns.graph import GraphIndex
+from repro.anns import registry
+from repro.anns.api import SearchParams, SearchResult, effective_ef
 
 
 @dataclass(frozen=True)
 class VariantConfig:
+    # -- backend family (registry key; the coarsest action dimension) -----
+    backend: str = "graph"
     # -- graph construction module (§6.1) --------------------------------
     degree: int = 32                 # R: fixed out-degree
     ef_construction: int = 64        # candidate-pool breadth per round
@@ -36,7 +44,8 @@ class VariantConfig:
     rerank_factor: int = 2
 
     def describe(self) -> str:
-        return (f"R={self.degree} efc={self.ef_construction} "
+        return (f"[{self.backend}] R={self.degree} "
+                f"efc={self.ef_construction} "
                 f"rounds={self.nn_descent_rounds} a={self.alpha} "
                 f"eps={self.num_entry_points} adEF={self.adaptive_ef_coef} "
                 f"g={self.gather_width} pat={self.patience} "
@@ -46,53 +55,63 @@ class VariantConfig:
 # the paper's baseline (GLASS defaults, §3.5): single entry point, fixed ef,
 # no batching/early-termination/quantization tricks.
 GLASS_BASELINE = VariantConfig(
-    degree=32, ef_construction=64, nn_descent_rounds=4, alpha=1.0,
-    num_entry_points=1, adaptive_ef_coef=0.0, gather_width=1,
+    backend="graph", degree=32, ef_construction=64, nn_descent_rounds=4,
+    alpha=1.0, num_entry_points=1, adaptive_ef_coef=0.0, gather_width=1,
     patience=0, quantized_prefilter=False, rerank_factor=1)
 
 
 class Engine:
-    """build_index() / search() with a VariantConfig — the module interface
-    the paper's prompt template mandates (Table 1)."""
+    """Compatibility facade: ``build_index()`` / ``search()`` with a
+    VariantConfig — the module interface the paper's prompt template
+    mandates (Table 1).  All real work is delegated to the registered
+    :class:`~repro.anns.api.AnnsIndex` backend named by
+    ``variant.backend``."""
 
     def __init__(self, variant: VariantConfig, metric: str = "l2",
                  seed: int = 0):
         self.variant = variant
         self.metric = metric
         self.seed = seed
-        self.index: GraphIndex | None = None
+        self.backend = registry.create(
+            getattr(variant, "backend", "graph") or "graph",
+            variant=variant, metric=metric, seed=seed)
 
-    def build_index(self, base: np.ndarray) -> GraphIndex:
-        v = self.variant
-        self.index = construction.build_graph(
-            base, metric=self.metric, degree=v.degree,
-            ef_construction=v.ef_construction, rounds=v.nn_descent_rounds,
-            alpha=v.alpha, num_entry_points=v.num_entry_points,
-            quantize=v.quantized_prefilter, seed=self.seed)
-        return self.index
+    # the built state lives on the backend; expose it read/write so legacy
+    # callers (tests, the RL index cache) can keep sharing/patching it.
+    @property
+    def index(self):
+        return self.backend.index
+
+    @index.setter
+    def index(self, value):
+        self.backend.index = value
+
+    def build_index(self, base: np.ndarray):
+        return self.backend.build(base)
 
     def effective_ef(self, ef: int, target_recall: float = 0.0) -> int:
-        """Paper §6.1: dynamic-EF scaling above a critical recall."""
-        v = self.variant
-        critical = 0.9
-        if v.adaptive_ef_coef > 0 and target_recall > critical:
-            excess = target_recall - critical
-            return int(ef * (1.0 + excess * v.adaptive_ef_coef))
-        return ef
+        """Paper §6.1: dynamic-EF scaling above a critical recall (raw,
+        unbucketed value — the backend snaps it to the static ladder)."""
+        return effective_ef(ef, target_recall, self.variant.adaptive_ef_coef)
 
-    def search(self, queries: np.ndarray | jax.Array, k: int, ef: int,
-               target_recall: float = 0.0):
-        assert self.index is not None, "build_index first"
-        v = self.variant
-        ids, dists, steps, exps = search_lib.search(
-            self.index, jnp.asarray(queries, jnp.float32),
-            ef=self.effective_ef(ef, target_recall), k=k,
-            gather_width=v.gather_width, patience=v.patience,
-            quantized=v.quantized_prefilter, rerank=v.rerank_factor)
-        return ids, dists
+    def search(self, queries, k: int, ef: int, target_recall: float = 0.0):
+        """Legacy kwarg API: returns ``(ids, dists)``."""
+        res = self.query(queries,
+                         SearchParams(k=k, ef=ef, target_recall=target_recall))
+        return res.ids, res.dists
+
+    def query(self, queries, params: SearchParams) -> SearchResult:
+        """Typed API: the backend search with full telemetry."""
+        return self.backend.search(queries, params)
+
+    def memory_bytes(self) -> int:
+        return self.backend.memory_bytes()
 
     def with_variant(self, **overrides) -> "Engine":
         eng = Engine(dataclasses.replace(self.variant, **overrides),
                      self.metric, self.seed)
-        eng.index = self.index
+        if eng.variant.backend == self.variant.backend:
+            # same family => the built state is reusable; a different
+            # backend needs its own build_index() call
+            eng.index = self.index
         return eng

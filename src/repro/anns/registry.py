@@ -1,0 +1,81 @@
+"""String-keyed backend registry for :class:`repro.anns.api.AnnsIndex`.
+
+Built-in backends (loaded lazily, so importing this module is cheap and
+cycle-free):
+
+- ``"graph"``               — beam search over the flat fixed-degree graph
+                              (the seed engine, unchanged behavior).
+- ``"brute_force"``         — exact search through the Pallas
+                              ``pairwise_distance`` + ``topk`` kernels; the
+                              recall=1.0 anchor of every QPS-recall curve.
+- ``"quantized_prefilter"`` — int8 graph prefilter + fp32 rerank, lifted
+                              out of the beam-search ``quantized`` flag
+                              into a composable backend.
+
+Adding a backend::
+
+    from repro.anns.registry import register
+
+    @register("my_ivf")
+    class IvfBackend:
+        name = "my_ivf"
+        def __init__(self, variant=None, *, metric="l2", seed=0):
+            self.index = None          # built state (protocol attribute)
+            ...
+        def build(self, base): ...
+        def search(self, queries, params): ...
+        def memory_bytes(self): ...
+        def to_state_dict(self): ...
+        def from_state_dict(self, state): ...
+
+then select it with ``VariantConfig(backend="my_ivf")`` or
+``registry.create("my_ivf")`` — every bench/serve/RL layer picks it up by
+name.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Type
+
+_REGISTRY: Dict[str, type] = {}
+_BUILTINS_LOADED = False
+
+
+def register(name: str) -> Callable[[type], type]:
+    """Class decorator: register ``cls`` under ``name`` (last write wins)."""
+    def deco(cls: type) -> type:
+        _REGISTRY[name] = cls
+        if not getattr(cls, "name", None):
+            cls.name = name
+        return cls
+    return deco
+
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        # side-effect import: each module registers its backend class
+        from repro.anns import backends  # noqa: F401
+
+
+def get(name: str) -> Type:
+    """Backend class for ``name``; raises KeyError listing known names."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown ANNS backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def create(name: str, variant=None, *, metric: str = "l2", seed: int = 0):
+    """Instantiate a backend by name (the one constructor shape all
+    backends share: ``(variant, *, metric, seed)``)."""
+    return get(name)(variant, metric=metric, seed=seed)
+
+
+def available() -> tuple:
+    """Sorted names of all registered backends."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))

@@ -23,6 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.anns.api import round_steps
 from repro.anns.graph import GraphIndex
 
 BIG = 3.0e38
@@ -180,7 +181,11 @@ def search(index: GraphIndex, queries: jax.Array, *, ef: int, k: int,
     """Public batched k-NN search. Returns (ids (B,k), dists, steps, expansions)."""
     ef = max(ef, k, index.entry_points.shape[0])
     if max_steps is None:
-        max_steps = 4 * ef // max(1, gather_width) + 16
+        # bucket the derived step cap onto a static ladder: max_steps is a
+        # static argname of the jitted search, and the while_loop exits
+        # early via the active mask, so a rounded-up cap changes nothing
+        # for converged searches but collapses jit traces across sweeps.
+        max_steps = round_steps(4 * ef // max(1, gather_width) + 16)
     quantized = quantized and index.base_q is not None
     return _beam_search(
         index.neighbors, index.base, index.base_q, index.scales,

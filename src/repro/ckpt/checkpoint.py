@@ -22,7 +22,11 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                                   # optional dep: fall back to raw
+    import zstandard as zstd           # msgpack frames when absent so the
+except ModuleNotFoundError:            # rest of the package stays importable
+    zstd = None
 
 
 def _flatten_with_paths(tree):
@@ -55,9 +59,11 @@ def save_checkpoint(path: str, tree, step: int, extra: dict | None = None):
             "data": arr.tobytes(),
         })
     payload = msgpack.packb(frames, use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=3).compress(payload)
+    if zstd is not None:
+        payload = zstd.ZstdCompressor(level=3).compress(payload)
+    manifest["compression"] = "zstd" if zstd is not None else "none"
     with open(os.path.join(tmp, "shard_0.bin"), "wb") as f:
-        f.write(comp)
+        f.write(payload)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(path):
@@ -72,7 +78,13 @@ def load_checkpoint(path: str, like_tree=None):
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     with open(os.path.join(path, "shard_0.bin"), "rb") as f:
-        payload = zstd.ZstdDecompressor().decompress(f.read())
+        payload = f.read()
+    if manifest.get("compression", "zstd") == "zstd":
+        if zstd is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd compression but "
+                "zstandard is not installed")
+        payload = zstd.ZstdDecompressor().decompress(payload)
     frames = msgpack.unpackb(payload, raw=False)
 
     arrays = {}

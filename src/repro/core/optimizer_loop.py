@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro.anns.api import SearchParams
 from repro.anns.bench import CurvePoint, measure_point
 from repro.anns.datasets import Dataset
 from repro.anns.engine import Engine, GLASS_BASELINE, VariantConfig
@@ -87,8 +88,10 @@ class CrinnOptimizer:
     # Engine evaluation
     # ------------------------------------------------------------------
     def _construction_key(self, v: VariantConfig) -> tuple:
-        return (v.degree, v.ef_construction, v.nn_descent_rounds, v.alpha,
-                v.num_entry_points)
+        # the backend family is part of the build identity: different
+        # backends build different state from the same knobs.
+        return (v.backend, v.degree, v.ef_construction, v.nn_descent_rounds,
+                v.alpha, v.num_entry_points)
 
     def _engine_for(self, v: VariantConfig) -> Engine:
         key = self._construction_key(v)
@@ -97,7 +100,10 @@ class CrinnOptimizer:
             eng = Engine(v, metric=self.ds.metric, seed=self.loop.seed)
             eng.build_index(self.ds.base)
             self._index_cache[key] = eng
-        if v.quantized_prefilter and eng.index.base_q is None:
+        if (v.quantized_prefilter
+                and getattr(eng.index, "base_q", "na") is None):
+            # graph-family state built without codes: patch them in so the
+            # cached build is reusable across refinement variants
             from repro.kernels.qdist.ops import quantize_int8
             bq, sc = quantize_int8(eng.index.base)
             eng.index.base_q, eng.index.scales = bq, sc
@@ -110,9 +116,9 @@ class CrinnOptimizer:
         pts = []
         for ef in self.loop.ef_sweep:
             tr = 0.95 if ef >= max(self.loop.ef_sweep) // 2 else 0.0
-            pts.append(measure_point(eng, self.ds, ef=ef, k=self.loop.k,
-                                     repeats=self.loop.bench_repeats,
-                                     target_recall=tr))
+            params = SearchParams(k=self.loop.k, ef=ef, target_recall=tr)
+            pts.append(measure_point(eng, self.ds, params=params,
+                                     repeats=self.loop.bench_repeats))
         return pts
 
     def evaluate(self, v: VariantConfig) -> RewardResult:

@@ -21,6 +21,13 @@ from dataclasses import dataclass
 
 from repro.anns.engine import VariantConfig
 
+# Backend families the registry exposes (repro.anns.registry).  Not yet a
+# grammar knob: the reward landscape across whole algorithm families needs
+# per-family baselines first (see ROADMAP "backend choice inside the GRPO
+# action space").  ``VariantConfig.backend`` already carries the choice, so
+# promoting this tuple into MODULES is the only change needed later.
+BACKEND_CHOICES = ("graph", "brute_force", "quantized_prefilter")
+
 # module name -> ordered list of (knob, choices)
 MODULES: dict[str, list[tuple[str, tuple]]] = {
     "graph_construction": [

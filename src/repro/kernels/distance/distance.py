@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import tpu_compiler_params
+
 
 def _kernel(q_ref, x_ref, qn_ref, xn_ref, o_ref, acc_ref, *, nd: int, metric: str):
     @pl.when(pl.program_id(2) == 0)
@@ -72,7 +74,7 @@ def distance(
         out_specs=pl.BlockSpec((bq, bx), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nq, nx), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bq, bx), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, x, qn, xn)

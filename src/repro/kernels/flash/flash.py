@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import tpu_compiler_params
+
 NEG_INF = -2.0 ** 30
 
 
@@ -113,7 +115,7 @@ def flash_attention(
             pltpu.VMEM((bq * G, 1), jnp.float32),
             pltpu.VMEM((bq * G, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, k, v)

@@ -3,7 +3,10 @@ batched queries (the paper's deployment artifact), plus an optional policy
 generation service.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset sift-128-euclidean \
-        --n-base 5000 --n-requests 256 --ef 64
+        --n-base 5000 --n-requests 256 --ef 64 --backend graph
+
+Any backend registered in ``repro.anns.registry`` can be served by name
+(``--backend brute_force`` gives the exact-search reference deployment).
 """
 import argparse
 import time
@@ -18,15 +21,23 @@ def main():
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--backend", default="graph",
+                    help="ANNS backend name (see repro.anns.registry)")
     ap.add_argument("--optimized", action="store_true",
                     help="serve the CRINN-optimized variant instead of GLASS")
     args = ap.parse_args()
 
+    import dataclasses
+
     import numpy as np
-    from repro.anns import Engine, make_dataset
+    from repro.anns import Engine, SearchParams, make_dataset, registry
     from repro.anns.datasets import recall_at_k
     from repro.anns.engine import GLASS_BASELINE, VariantConfig
     from repro.runtime.server import AnnsServer
+
+    if args.backend not in registry.available():
+        ap.error(f"unknown backend {args.backend!r}; "
+                 f"registered: {registry.available()}")
 
     ds = make_dataset(args.dataset, n_base=args.n_base, n_query=args.n_query)
     variant = GLASS_BASELINE
@@ -34,13 +45,16 @@ def main():
         variant = VariantConfig(alpha=1.2, num_entry_points=3,
                                 gather_width=2, patience=4,
                                 adaptive_ef_coef=14.5)
+    variant = dataclasses.replace(variant, backend=args.backend)
     print(f"building index ({variant.describe()}) ...")
     t0 = time.time()
     eng = Engine(variant, metric=ds.metric)
     eng.build_index(ds.base)
-    print(f"built in {time.time()-t0:.1f}s")
+    print(f"built in {time.time()-t0:.1f}s "
+          f"({eng.memory_bytes()/1e6:.1f} MB resident)")
 
-    server = AnnsServer(eng, max_batch=args.max_batch, ef=args.ef, k=args.k)
+    server = AnnsServer(eng, max_batch=args.max_batch,
+                        params=SearchParams(k=args.k, ef=args.ef))
     rng = np.random.default_rng(0)
     order = rng.integers(0, len(ds.queries), size=args.n_requests)
     t0 = time.time()

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.anns.api import SearchParams, round_ef
 from repro.anns.engine import Engine
 
 
@@ -36,16 +37,39 @@ class AnnsResponse:
 
 class AnnsServer:
     def __init__(self, engine: Engine, *, max_batch: int = 64,
-                 ef: int = 64, k: int = 10):
+                 ef: int = 64, k: int = 10,
+                 params: SearchParams | None = None):
         self.engine = engine
         self.max_batch = max_batch
-        self.ef = ef
-        self.k = k
+        self.params = params or SearchParams(k=k, ef=ef)
         self.queue: list[AnnsRequest] = []
         self.served = 0
 
+    # legacy attribute views of the typed params
+    @property
+    def ef(self) -> int:
+        return self.params.ef
+
+    @property
+    def k(self) -> int:
+        return self.params.k
+
     def submit(self, query: np.ndarray, k: int | None = None):
-        self.queue.append(AnnsRequest(query, k or self.k))
+        if k is None:
+            k = self.params.k
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.queue.append(AnnsRequest(query, k))
+
+    def _index_size(self) -> int | None:
+        idx = getattr(self.engine, "index", None)
+        if idx is None:
+            return None
+        n = getattr(idx, "n", None)                 # GraphIndex
+        if n is not None:
+            return int(n)
+        shape = getattr(idx, "shape", None)         # raw base matrix
+        return int(shape[0]) if shape else None
 
     def _pad(self, queries: np.ndarray) -> np.ndarray:
         b = queries.shape[0]
@@ -55,19 +79,33 @@ class AnnsServer:
         return np.concatenate([queries, pad], axis=0)
 
     def flush(self) -> list[AnnsResponse]:
-        """Serve up to max_batch queued requests in one jitted search."""
+        """Serve up to max_batch queued requests in one jitted search.
+
+        The batch is searched at the *largest* k any request asked for
+        (bucketed onto the static ladder so heterogeneous-k traffic reuses
+        compiled traces), then each response is sliced down to its own
+        ``r.k`` — a request may ask for more neighbors than the server
+        default without getting silently truncated results.
+        """
         if not self.queue:
             return []
         batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
         queries = np.stack([r.query for r in batch]).astype(np.float32)
-        ids, dists = self.engine.search(self._pad(queries), k=self.k, ef=self.ef)
-        jax.block_until_ready(ids)
+        kmax = max(r.k for r in batch)
+        k_search = self.params.k if kmax <= self.params.k else round_ef(kmax)
+        n = self._index_size()
+        if n is not None:
+            k_search = min(k_search, n)   # an index holds at most n neighbors
+        search = (self.engine.query if isinstance(self.engine, Engine)
+                  else self.engine.search)      # bare AnnsIndex backend
+        res = search(self._pad(queries), self.params.replace(k=k_search))
+        jax.block_until_ready(res.ids)
         now = time.perf_counter()
         out = []
         for i, r in enumerate(batch):
             out.append(AnnsResponse(
-                ids=np.asarray(ids[i, : r.k]),
-                dists=np.asarray(dists[i, : r.k]),
+                ids=np.asarray(res.ids[i, : r.k]),
+                dists=np.asarray(res.dists[i, : r.k]),
                 latency_ms=1e3 * (now - r.t_submit)))
         self.served += len(batch)
         return out

@@ -1,0 +1,243 @@
+"""Backend-protocol API tests: registry round-trip, SearchParams legacy
+parity, cross-backend agreement against the exact brute-force anchor,
+serving with heterogeneous k, and jit-recompilation hygiene."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.anns import Engine, SearchParams, SearchResult, make_dataset
+from repro.anns import registry
+from repro.anns.api import AnnsIndex, round_ef, round_steps
+from repro.anns.datasets import recall_at_k
+from repro.anns.engine import GLASS_BASELINE
+from repro.anns.search import _beam_search, search as raw_search
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("sift-128-euclidean", n_base=1500, n_query=32)
+
+
+@pytest.fixture(scope="module")
+def graph_backend(ds):
+    b = registry.create("graph",
+                        dataclasses.replace(GLASS_BASELINE, alpha=1.2),
+                        metric=ds.metric)
+    b.build(ds.base)
+    return b
+
+
+@pytest.fixture(scope="module")
+def exact_backend(ds):
+    b = registry.create("brute_force", metric=ds.metric)
+    b.build(ds.base)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_builtin_backends():
+    names = registry.available()
+    for required in ("graph", "brute_force", "quantized_prefilter"):
+        assert required in names, names
+
+
+def test_registry_register_get_roundtrip():
+    @registry.register("_test_dummy")
+    class Dummy:
+        def __init__(self, variant=None, *, metric="l2", seed=0):
+            self.variant, self.metric, self.seed = variant, metric, seed
+
+    try:
+        assert registry.get("_test_dummy") is Dummy
+        inst = registry.create("_test_dummy", metric="ip", seed=3)
+        assert inst.metric == "ip" and inst.seed == 3
+        assert inst.name == "_test_dummy"      # filled by register()
+    finally:
+        del registry._REGISTRY["_test_dummy"]  # don't leak into the session
+
+
+def test_registry_unknown_name_errors():
+    with pytest.raises(KeyError, match="no_such_backend"):
+        registry.get("no_such_backend")
+    with pytest.raises(KeyError, match="graph"):   # message lists known names
+        registry.create("no_such_backend")
+
+
+def test_backends_satisfy_protocol(graph_backend, exact_backend):
+    assert isinstance(graph_backend, AnnsIndex)
+    assert isinstance(exact_backend, AnnsIndex)
+
+
+# ---------------------------------------------------------------------------
+# SearchParams / SearchResult
+# ---------------------------------------------------------------------------
+
+def test_search_params_defaults_match_legacy_kwargs(ds, graph_backend):
+    """SearchParams() resolved without a variant must reproduce the legacy
+    ``search()`` kwarg defaults bit-for-bit on the same built index."""
+    q = np.asarray(ds.queries, np.float32)
+    ids_old, d_old, _, _ = raw_search(
+        graph_backend.index, jax.numpy.asarray(q), ef=64, k=10)
+    p = SearchParams(k=10, ef=64).resolved(None)
+    assert (p.gather_width, p.patience, p.quantized, p.rerank_factor) == \
+        (1, 0, False, 2)
+    res = graph_backend.search(q, SearchParams(k=10, ef=64))
+    # GLASS-family variant carries the same search knobs as the legacy
+    # defaults (modulo rerank, inert without quantization)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ids_old))
+    np.testing.assert_array_equal(np.asarray(res.dists), np.asarray(d_old))
+
+
+def test_search_result_telemetry(ds, graph_backend):
+    res = graph_backend.search(ds.queries, SearchParams(k=10, ef=48))
+    assert isinstance(res, SearchResult)
+    assert res.k == 10
+    assert int(res.steps) > 0 and int(res.expansions) > 0
+    assert res.backend == "graph"
+
+
+def test_params_resolved_prefers_explicit_over_variant(ds, graph_backend):
+    p = SearchParams(k=10, ef=32, gather_width=4).resolved(
+        graph_backend.variant)
+    assert p.gather_width == 4                      # explicit wins
+    assert p.patience == graph_backend.variant.patience
+
+
+# ---------------------------------------------------------------------------
+# cross-backend agreement (exact anchor)
+# ---------------------------------------------------------------------------
+
+def test_brute_force_is_exact(ds, exact_backend):
+    res = exact_backend.search(ds.queries, SearchParams(k=10))
+    assert recall_at_k(np.asarray(res.ids), ds.gt, 10) == 1.0
+    d = np.asarray(res.dists)
+    assert (np.diff(d, axis=1) >= -1e-5).all()
+
+
+def test_graph_agrees_with_brute_force_ground_truth(ds, graph_backend,
+                                                    exact_backend):
+    """Graph recall measured against the brute-force backend's answers —
+    the registry's own exact anchor, not the dataset's precomputed gt."""
+    anchor = exact_backend.search(ds.queries, SearchParams(k=10))
+    res = graph_backend.search(ds.queries, SearchParams(k=10, ef=96))
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(anchor.ids), 10)
+    assert rec > 0.9, rec
+
+
+def test_quantized_prefilter_backend_close_to_fp32(ds, graph_backend):
+    b = registry.create(
+        "quantized_prefilter",
+        dataclasses.replace(GLASS_BASELINE, alpha=1.2, rerank_factor=4),
+        metric=ds.metric)
+    b.build(ds.base)
+    assert b.index.base_q is not None       # codes built unconditionally
+    res_q = b.search(ds.queries, SearchParams(k=10, ef=64))
+    res_f = graph_backend.search(ds.queries, SearchParams(k=10, ef=64))
+    rq = recall_at_k(np.asarray(res_q.ids), ds.gt, 10)
+    rf = recall_at_k(np.asarray(res_f.ids), ds.gt, 10)
+    assert rq >= rf - 0.05, (rq, rf)
+    # fp32 rerank => reported dists are true fp32 distances, ascending
+    d = np.asarray(res_q.dists)
+    assert (np.diff(d, axis=1) >= -1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# engine facade + state round-trip
+# ---------------------------------------------------------------------------
+
+def test_engine_facade_compat(ds, graph_backend):
+    eng = Engine(dataclasses.replace(GLASS_BASELINE, alpha=1.2),
+                 metric=ds.metric)
+    eng.index = graph_backend.index           # share the built state
+    ids, dists = eng.search(ds.queries, k=10, ef=64)
+    res = graph_backend.search(ds.queries, SearchParams(k=10, ef=64))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(res.ids))
+    assert eng.memory_bytes() == graph_backend.memory_bytes() > 0
+
+
+def test_variant_backend_field_selects_backend(ds):
+    eng = Engine(dataclasses.replace(GLASS_BASELINE, backend="brute_force"),
+                 metric=ds.metric)
+    eng.build_index(ds.base)
+    assert eng.backend.name == "brute_force"
+    ids, _ = eng.search(ds.queries, k=10, ef=64)
+    assert recall_at_k(np.asarray(ids), ds.gt, 10) == 1.0
+
+
+def test_state_dict_roundtrip(ds, graph_backend):
+    state = graph_backend.to_state_dict()
+    assert isinstance(state["neighbors"], np.ndarray)
+    clone = registry.create("graph", graph_backend.variant,
+                            metric=ds.metric)
+    clone.from_state_dict(state)
+    a = graph_backend.search(ds.queries, SearchParams(k=10, ef=48))
+    b = clone.search(ds.queries, SearchParams(k=10, ef=48))
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+# ---------------------------------------------------------------------------
+# serving: heterogeneous k (the flush truncation bug)
+# ---------------------------------------------------------------------------
+
+def test_server_serves_k_larger_than_default(ds, graph_backend):
+    from repro.runtime.server import AnnsServer
+    eng = Engine(dataclasses.replace(GLASS_BASELINE, alpha=1.2),
+                 metric=ds.metric)
+    eng.index = graph_backend.index
+    srv = AnnsServer(eng, max_batch=8, params=SearchParams(k=10, ef=64))
+    for i in range(3):
+        srv.submit(ds.queries[i], k=5)
+    srv.submit(ds.queries[3], k=25)            # > server default k
+    out = srv.run()
+    assert [len(r.ids) for r in out] == [5, 5, 5, 25]
+    # the deep request must match a direct search, not be a truncated k=10
+    direct = graph_backend.search(ds.queries[3:4],
+                                  SearchParams(k=32, ef=64))
+    np.testing.assert_array_equal(np.asarray(out[3].ids),
+                                  np.asarray(direct.ids)[0, :25])
+
+
+def test_server_rejects_invalid_k(ds, graph_backend):
+    from repro.runtime.server import AnnsServer
+    eng = Engine(GLASS_BASELINE, metric=ds.metric)
+    eng.index = graph_backend.index
+    srv = AnnsServer(eng, params=SearchParams(k=10, ef=64))
+    with pytest.raises(ValueError):
+        srv.submit(ds.queries[0], k=0)
+
+
+# ---------------------------------------------------------------------------
+# jit hygiene: ef / max_steps bucketing
+# ---------------------------------------------------------------------------
+
+def test_round_ef_ladder_monotone():
+    assert round_ef(64) == 64                     # ladder values unchanged
+    assert round_ef(65) == 96
+    assert round_ef(110) == 128
+    assert round_steps(272) == 384
+    prev = 0
+    for ef in range(1, 600):
+        r = round_ef(ef)
+        assert r >= ef and r >= prev
+        prev = r
+
+
+def test_target_recall_sweep_does_not_recompile_per_point(ds, graph_backend):
+    """Adaptive-EF used to derive an arbitrary integer ef per
+    (ef, target_recall) pair => one jit trace per point.  Bucketed efs
+    must collapse a 9-point sweep onto <= 4 traces."""
+    eng = Engine(dataclasses.replace(GLASS_BASELINE, alpha=1.2,
+                                     adaptive_ef_coef=14.5),
+                 metric=ds.metric)
+    eng.index = graph_backend.index
+    # warm the ladder rungs this sweep can hit
+    before = _beam_search._cache_size()
+    for tr in (0.91, 0.92, 0.93, 0.94, 0.95, 0.96, 0.97, 0.98, 0.99):
+        eng.search(ds.queries, k=10, ef=96, target_recall=tr)
+    compiles = _beam_search._cache_size() - before
+    assert compiles <= 4, compiles
