@@ -1,13 +1,16 @@
 """Paper Table 3: QPS at fixed recall levels, CRINN-optimized variant vs
 the GLASS baseline (the paper's RL starting point), per dataset.
 
-Any backend registered in ``repro.anns.registry`` can be swept by name:
+Any backend registered in ``repro.anns.registry`` can be swept by name
+(``--backends all`` expands to every registered backend):
 
     PYTHONPATH=src python benchmarks/table3_qps_recall.py \
-        --backends graph,quantized_prefilter,brute_force
+        --backends graph,quantized_prefilter,ivf,brute_force
 
 ``brute_force`` is exact, so it contributes a single recall=1.0 anchor
-curve instead of a glass/crinn pair.
+curve instead of a glass/crinn pair.  Rows carry ``build_seconds`` and
+``memory_bytes`` alongside QPS so families can be compared on build
+cost and footprint, not just the frontier.
 
 Offline scaling: synthetic matched-dimension datasets at reduced N (the
 container's CPU plays the benchmark machine); the comparison structure —
@@ -19,8 +22,9 @@ import argparse
 import dataclasses
 
 from benchmarks.common import CRINN_DISCOVERED, csv_row
-from repro.anns import Engine, SearchParams, make_dataset
-from repro.anns.bench import measure_point, qps_at_recall, qps_recall_curve
+from repro.anns import SearchParams, make_dataset, registry
+from repro.anns.bench import (build_timed, measure_point, qps_at_recall,
+                              qps_recall_curve)
 from repro.anns.engine import GLASS_BASELINE
 
 RECALL_TARGETS = (0.90, 0.95, 0.99)
@@ -28,11 +32,13 @@ EF_SWEEP = (16, 24, 32, 48, 64, 96, 128, 192)
 
 
 def _curve(variant, backend, ds, repeats):
-    eng = Engine(dataclasses.replace(variant, backend=backend),
-                 metric=ds.metric)
-    eng.build_index(ds.base)
-    return qps_recall_curve(eng, ds, ef_sweep=EF_SWEEP, repeats=repeats,
-                            base_params=SearchParams(k=10))
+    b = registry.create(backend,
+                        dataclasses.replace(variant, backend=backend),
+                        metric=ds.metric)
+    build_s = build_timed(b, ds.base)
+    return qps_recall_curve(b, ds, ef_sweep=EF_SWEEP, repeats=repeats,
+                            base_params=SearchParams(k=10),
+                            build_seconds=build_s)
 
 
 def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
@@ -45,23 +51,27 @@ def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
         for backend in backends:
             if backend == "brute_force":
                 # exact and ef-free: one anchor point, recall pinned at 1.0
-                eng = Engine(dataclasses.replace(GLASS_BASELINE,
-                                                 backend=backend),
-                             metric=ds.metric)
-                eng.build_index(ds.base)
-                best = measure_point(eng, ds, params=SearchParams(k=10),
-                                     repeats=repeats).qps
+                b = registry.create(backend, metric=ds.metric)
+                build_s = build_timed(b, ds.base)
+                pt = measure_point(b, ds, params=SearchParams(k=10),
+                                   repeats=repeats, build_seconds=build_s)
                 rows.append({"dataset": name, "backend": backend,
-                             "recall": 1.0, "crinn_qps": best,
+                             "recall": 1.0, "crinn_qps": pt.qps,
                              "glass_qps": None,
-                             "improvement_pct": float("nan")})
-                print(csv_row(f"table3/{name}/{backend}/exact",
-                              1e6 / best, f"qps={best:.0f};recall=1.000"))
+                             "improvement_pct": float("nan"),
+                             "build_seconds": pt.build_seconds,
+                             "memory_bytes": pt.memory_bytes})
+                print(csv_row(
+                    f"table3/{name}/{backend}/exact", 1e6 / pt.qps,
+                    f"qps={pt.qps:.0f};recall=1.000;"
+                    f"build_s={pt.build_seconds:.2f};"
+                    f"mem_mb={pt.memory_bytes/1e6:.1f}"))
                 continue
             curves = {
                 "glass": _curve(GLASS_BASELINE, backend, ds, repeats),
                 "crinn": _curve(CRINN_DISCOVERED, backend, ds, repeats),
             }
+            crinn_pt = curves["crinn"][0]
             for r in RECALL_TARGETS:
                 qb = qps_at_recall(curves["glass"], r)
                 qc = qps_at_recall(curves["crinn"], r)
@@ -71,28 +81,37 @@ def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                 rows.append({
                     "dataset": name, "backend": backend, "recall": r,
                     "crinn_qps": qc, "glass_qps": qb, "improvement_pct": imp,
+                    "build_seconds": crinn_pt.build_seconds,
+                    "memory_bytes": crinn_pt.memory_bytes,
                 })
                 us = 1e6 / qc if qc else float("nan")
                 print(csv_row(
                     f"table3/{name}/{backend}/r{r:.2f}", us,
                     f"crinn_qps={qc and round(qc)};glass_qps={qb and round(qb)};"
-                    f"improvement={imp:+.1f}%"))
+                    f"improvement={imp:+.1f}%;"
+                    f"build_s={crinn_pt.build_seconds:.2f};"
+                    f"mem_mb={crinn_pt.memory_bytes/1e6:.1f}"))
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", default="graph",
-                    help="comma-separated registry names to sweep")
+                    help="comma-separated registry names to sweep, "
+                         "or 'all' for every registered backend")
     ap.add_argument("--n-base", type=int, default=5000)
     ap.add_argument("--n-query", type=int, default=100)
     ap.add_argument("--repeats", type=int, default=2)
     args = ap.parse_args()
-    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
-    from repro.anns import registry
+    from repro.anns.registry import list_backends
+    if args.backends.strip() == "all":
+        backends = list_backends()
+    else:
+        backends = tuple(b.strip() for b in args.backends.split(",")
+                         if b.strip())
     for b in backends:
-        if b not in registry.available():
+        if b not in list_backends():
             ap.error(f"unknown backend {b!r}; registered: "
-                     f"{registry.available()}")
+                     f"{list_backends()}")
     run(n_base=args.n_base, n_query=args.n_query, repeats=args.repeats,
         backends=backends)

@@ -27,11 +27,35 @@ with ``@repro.anns.registry.register("name")``, and every layer
 (benchmarks, server, RL loop) can select it by name.  See
 ``repro/anns/registry.py`` for a worked example.
 """
-from repro.anns.api import AnnsIndex, SearchParams, SearchResult
-from repro.anns.engine import Engine, VariantConfig
-from repro.anns.datasets import Dataset, make_dataset, DATASET_SPECS
+import importlib
+
 from repro.anns import registry
 
-__all__ = ["AnnsIndex", "SearchParams", "SearchResult", "Engine",
-           "VariantConfig", "Dataset", "make_dataset", "DATASET_SPECS",
-           "registry"]
+# Lazy exports (PEP 562): ``from repro.anns import registry`` must stay
+# jax-free (CLI flag validation, list_backends), so the jax-importing
+# modules load only when their symbols are first touched.
+_EXPORTS = {
+    "AnnsIndex": "repro.anns.api",
+    "SearchParams": "repro.anns.api",
+    "SearchResult": "repro.anns.api",
+    "Engine": "repro.anns.engine",
+    "VariantConfig": "repro.anns.engine",
+    "Dataset": "repro.anns.datasets",
+    "make_dataset": "repro.anns.datasets",
+    "DATASET_SPECS": "repro.anns.datasets",
+}
+
+__all__ = sorted(_EXPORTS) + ["registry"]
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -49,20 +49,24 @@ EF_LADDER = (8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
 STEP_LADDER = (16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024)
 
 
+def snap_to_ladder(value: int, ladder: tuple, overflow_step: int) -> int:
+    """Smallest ladder rung >= value; multiples of ``overflow_step`` past
+    the ladder's end.  One policy for every bucketed knob (ef, max_steps,
+    the IVF backend's nprobe) so a ladder change lands everywhere."""
+    for v in ladder:
+        if value <= v:
+            return v
+    return ((value + overflow_step - 1) // overflow_step) * overflow_step
+
+
 def round_ef(ef: int) -> int:
     """Smallest ladder rung >= ef (multiples of 128 past the ladder)."""
-    for v in EF_LADDER:
-        if ef <= v:
-            return v
-    return ((ef + 127) // 128) * 128
+    return snap_to_ladder(ef, EF_LADDER, 128)
 
 
 def round_steps(steps: int) -> int:
     """Smallest step-ladder rung >= steps (multiples of 256 past it)."""
-    for v in STEP_LADDER:
-        if steps <= v:
-            return v
-    return ((steps + 255) // 256) * 256
+    return snap_to_ladder(steps, STEP_LADDER, 256)
 
 
 # ---------------------------------------------------------------------------

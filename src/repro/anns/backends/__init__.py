@@ -1,14 +1,34 @@
 """Built-in :class:`repro.anns.api.AnnsIndex` backends.
 
-Importing this package registers all built-ins with
-:mod:`repro.anns.registry` (each module's ``@register`` decorator runs at
-import).  The registry imports this package lazily, so user code normally
-never needs to import it directly — ``registry.create("graph")`` is
-enough.
+Backend classes are exposed lazily (PEP 562): accessing e.g.
+``backends.IvfBackend`` imports only that backend's module, and the
+registry itself never imports this package eagerly — it maps names to
+defining modules and imports on first ``registry.get(name)``.  Importing
+``repro.anns.backends`` therefore stays free of jax/kernel import cost
+until a class is actually touched.
 """
-from repro.anns.backends.graph_beam import GraphBeamBackend
-from repro.anns.backends.brute_force import BruteForceBackend
-from repro.anns.backends.quantized import QuantizedPrefilterBackend
+from __future__ import annotations
 
-__all__ = ["GraphBeamBackend", "BruteForceBackend",
-           "QuantizedPrefilterBackend"]
+import importlib
+
+_EXPORTS = {
+    "GraphBeamBackend": "repro.anns.backends.graph_beam",
+    "BruteForceBackend": "repro.anns.backends.brute_force",
+    "QuantizedPrefilterBackend": "repro.anns.backends.quantized",
+    "IvfBackend": "repro.anns.backends.ivf",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value          # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

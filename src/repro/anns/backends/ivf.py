@@ -1,0 +1,177 @@
+"""``"ivf"`` backend: k-means cells + per-cell dense scans.
+
+Coarse stage routes through the Pallas ``pairwise_distance`` + ``topk``
+kernels (query x centroids), the probed cells are scanned as one
+rectangular gather over the cell-major layout (int8 codes by default,
+fp32 when ``SearchParams.quantized`` is explicitly ``False``), and the
+final answer comes from the standalone fp32 rerank stage shared with
+``backends/quantized.py``.
+
+Jit hygiene: ``SearchParams.ef`` maps onto ``nprobe`` through a static
+ladder (:data:`NPROBE_LADDER`), mirroring the graph family's EF_LADDER
+bucketing — an (ef, target_recall) sweep reuses a handful of compiled
+traces.  ``ef=64`` (the SearchParams default) probes exactly the
+variant's ``nprobe``; other efs scale it proportionally before snapping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import search as search_lib
+from repro.anns.api import (SearchParams, SearchResult, effective_ef,
+                            snap_to_ladder)
+from repro.anns.backends.quantized import fp32_rerank
+from repro.anns.ivf.layout import IvfIndex, build_ivf
+from repro.anns.registry import register
+from repro.kernels.distance.ops import pairwise_distance
+from repro.kernels.topk.ops import topk_smallest
+
+BIG = search_lib.BIG
+
+# Geometric ~1.5x nprobe ladder (same trick as api.EF_LADDER): derived
+# nprobes snap up to a rung so sweeps hit O(ladder) jit traces.
+NPROBE_LADDER = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256)
+
+
+def round_nprobe(nprobe: int) -> int:
+    """Smallest ladder rung >= nprobe (multiples of 128 past the ladder)."""
+    return snap_to_ladder(nprobe, NPROBE_LADDER, 128)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "nprobe", "k", "m", "metric", "quantized"))
+def _ivf_search(centroids, cells, ids, base, base_q, scales, queries, *,
+                nprobe: int, k: int, m: int, metric: str, quantized: bool):
+    """(B, d) queries -> (ids (B, k) original ids, dists (B, k) fp32).
+
+    Stage 1 (coarse, Pallas kernels): distance matrix to centroids +
+    top-nprobe cells.  Stage 2 (scan): gather the probed cells' padded
+    position rows — one (B, nprobe*pad) rectangular candidate block —
+    and score it densely (int8 dequant or fp32).  Stage 3: shortlist the
+    best m by scan distance, fp32-rerank, remap positions to original ids.
+
+    Pad slots (position -1) score BIG in the scan AND stay masked through
+    the rerank (the validity mask travels with the shortlist), so they can
+    never displace a real neighbor; duplicate ids appear only if the
+    probed cells genuinely hold fewer than k vectors, which the caller's
+    nprobe floor rules out.
+    """
+    B = queries.shape[0]
+    q32 = queries.astype(jnp.float32)
+
+    dc = pairwise_distance(q32, centroids, metric=metric)      # (B, C)
+    _, probe = topk_smallest(dc, nprobe)                       # (B, nprobe)
+
+    cand = cells[probe].reshape(B, -1)                         # (B, nprobe*pad)
+    valid = cand >= 0
+    pos = jnp.where(valid, cand, 0)
+    if quantized:
+        vecs = base_q[pos].astype(jnp.float32) * scales[pos][..., None]
+    else:
+        vecs = base[pos]
+    d = search_lib._qdist(q32, vecs, metric)
+    d = jnp.where(valid, d, BIG)
+
+    _, keep = jax.lax.top_k(-d, m)
+    short = jnp.take_along_axis(pos, keep, axis=1)             # (B, m)
+    short_valid = jnp.take_along_axis(valid, keep, axis=1)
+    out_pos, out_d = fp32_rerank(base, q32, short, k=k, metric=metric,
+                                 valid=short_valid)
+    return ids[out_pos], out_d, jnp.sum(valid)
+
+
+@register("ivf")
+class IvfBackend:
+    name = "ivf"
+
+    def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
+        if variant is None:
+            from repro.anns.engine import VariantConfig
+            variant = VariantConfig(backend="ivf")
+        self.variant = variant
+        self.metric = metric
+        self.seed = seed
+        self.index: IvfIndex | None = None
+
+    # -- AnnsIndex protocol ------------------------------------------------
+    def build(self, base: np.ndarray) -> IvfIndex:
+        v = self.variant
+        self.index = build_ivf(base, nlist=v.nlist,
+                               kmeans_iters=v.kmeans_iters,
+                               metric=self.metric, seed=self.seed)
+        return self.index
+
+    def _nprobe_for(self, params: SearchParams) -> int:
+        """Map the universal ``ef`` effort knob onto nprobe: the variant's
+        ``nprobe`` at the default ef=64, scaled proportionally elsewhere,
+        snapped to the static ladder, clamped to the cell count."""
+        ef = effective_ef(params.ef, params.target_recall,
+                          self.variant.adaptive_ef_coef)
+        raw = max(1, round(self.variant.nprobe * ef / 64))
+        return min(round_nprobe(raw), self.index.nlist)
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        assert self.index is not None, "build() first"
+        idx = self.index
+        p = params.resolved(self.variant)
+        k = min(p.k, idx.n)
+        nprobe = self._nprobe_for(p)
+        # the probed cells must hold at least k real vectors, or the
+        # answer can't contain k distinct ids (nprobe=1 over small cells
+        # undershoots); min_cells_for gives the worst-case floor and is
+        # <= nlist always, since the cells jointly hold all n >= k.
+        min_probe = idx.min_cells_for(k)
+        if nprobe < min_probe:
+            nprobe = min(round_nprobe(min_probe), idx.nlist)
+        # shortlist for the fp32 rerank; never wider than the probed block
+        m = max(k, min(max(p.rerank_factor, 1) * k, idx.n))
+        m = min(m, nprobe * idx.cell_pad)
+        # int8 scan is this backend's default; explicit quantized=False
+        # falls back to fp32 cell scans (params win over backend defaults)
+        quantized = True if params.quantized is None else bool(params.quantized)
+        out_ids, out_d, scanned = _ivf_search(
+            idx.centroids, idx.cells, idx.ids, idx.base, idx.base_q,
+            idx.scales, jnp.asarray(queries, jnp.float32),
+            nprobe=nprobe, k=k, m=m, metric=self.metric, quantized=quantized)
+        return SearchResult(ids=out_ids, dists=out_d, steps=nprobe,
+                            expansions=scanned, backend=self.name)
+
+    def memory_bytes(self) -> int:
+        idx = self.index
+        if idx is None:
+            return 0
+        arrays = (idx.centroids, idx.cells, idx.ids, idx.base, idx.base_q,
+                  idx.scales)
+        return (sum(a.size * a.dtype.itemsize for a in arrays)
+                + idx.offsets.nbytes)
+
+    def to_state_dict(self) -> dict:
+        idx = self.index
+        assert idx is not None, "build() first"
+        return {
+            "backend": self.name,
+            "metric": idx.metric,
+            "centroids": np.asarray(idx.centroids),
+            "cells": np.asarray(idx.cells),
+            "ids": np.asarray(idx.ids),
+            "base": np.asarray(idx.base),
+            "base_q": np.asarray(idx.base_q),
+            "scales": np.asarray(idx.scales),
+            "offsets": np.asarray(idx.offsets),
+        }
+
+    def from_state_dict(self, state: dict) -> None:
+        self.metric = state["metric"]
+        self.index = IvfIndex(
+            centroids=jnp.asarray(state["centroids"]),
+            cells=jnp.asarray(state["cells"]),
+            ids=jnp.asarray(state["ids"]),
+            base=jnp.asarray(state["base"]),
+            base_q=jnp.asarray(state["base_q"]),
+            scales=jnp.asarray(state["scales"]),
+            offsets=np.asarray(state["offsets"]),
+            metric=state["metric"])

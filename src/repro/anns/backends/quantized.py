@@ -24,14 +24,21 @@ from repro.anns.registry import register
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
-def fp32_rerank(base, queries, cand_ids, *, k: int, metric: str):
+def fp32_rerank(base, queries, cand_ids, *, k: int, metric: str,
+                valid=None):
     """Re-score (B, M) candidate ids in fp32 and keep the best k.
 
     Candidate order does not matter; duplicates are fine (set-recall is
-    unaffected and ties keep the first occurrence).
+    unaffected and ties keep the first occurrence).  ``valid`` (optional
+    (B, M) bool) marks real candidates: invalid slots — pad entries from
+    ragged shortlists (IVF cells, future sharded merges) — keep BIG
+    distance instead of being re-scored as whatever id they were clamped
+    to.
     """
     q32 = queries.astype(jnp.float32)
     d = search_lib._qdist(q32, base[cand_ids], metric)
+    if valid is not None:
+        d = jnp.where(valid, d, search_lib.BIG)
     nd, order = jax.lax.top_k(-d, k)
     ids = jnp.take_along_axis(cand_ids, order, axis=1)
     return ids, -nd

@@ -31,9 +31,29 @@ class CurvePoint:
     recall: float
     p50_ms: float
     backend: str = ""
+    # build-cost/memory context riding on every sweep record, so table3
+    # output can compare families on more than the QPS-recall frontier
+    # (IVF trades build time + padded-layout bytes for scan speed).
+    build_seconds: float = 0.0
+    memory_bytes: int = 0
 
 
 DEFAULT_EF_SWEEP = (10, 16, 24, 32, 48, 64, 96, 128, 192, 256)
+
+
+def build_timed(target, base) -> float:
+    """Build ``target``'s index (Engine facade or bare backend) and
+    return wall-clock build seconds — the value to thread into
+    :func:`measure_point`/:func:`qps_recall_curve` ``build_seconds``."""
+    backend = _backend_of(target)
+    t0 = time.perf_counter()
+    state = backend.build(np.asarray(base))
+    # index states are plain dataclasses (not pytrees): block on their
+    # array fields, or block_until_ready would no-op on the container and
+    # stop the clock while device work is still in flight
+    jax.block_until_ready(vars(state) if hasattr(state, "__dict__")
+                          else state)
+    return time.perf_counter() - t0
 
 
 def _backend_of(target):
@@ -44,7 +64,8 @@ def _backend_of(target):
 def measure_point(target, ds: Dataset, *, params: SearchParams | None = None,
                   ef: int | None = None, k: int | None = None,
                   repeats: int = 3,
-                  target_recall: float | None = None) -> CurvePoint:
+                  target_recall: float | None = None,
+                  build_seconds: float = 0.0) -> CurvePoint:
     """Time one operating point.  Pass ``params`` (preferred) or the
     legacy ``ef``/``k``/``target_recall`` kwargs — not both."""
     backend = _backend_of(target)
@@ -71,14 +92,18 @@ def measure_point(target, ds: Dataset, *, params: SearchParams | None = None,
     rec = recall_at_k(np.asarray(res.ids), ds.gt, params.k)
     return CurvePoint(ef=params.ef, qps=len(ds.queries) / t, recall=rec,
                       p50_ms=1e3 * t / len(ds.queries),
-                      backend=getattr(backend, "name", ""))
+                      backend=getattr(backend, "name", ""),
+                      build_seconds=build_seconds,
+                      memory_bytes=int(backend.memory_bytes()))
 
 
 def qps_recall_curve(target, ds: Dataset, *, k: int | None = None,
                      ef_sweep=DEFAULT_EF_SWEEP, repeats: int = 3,
-                     base_params: SearchParams | None = None) -> list[CurvePoint]:
+                     base_params: SearchParams | None = None,
+                     build_seconds: float = 0.0) -> list[CurvePoint]:
     """Sweep ``ef``; ``base_params`` carries every other knob (mutually
-    exclusive with the legacy ``k`` kwarg)."""
+    exclusive with the legacy ``k`` kwarg).  ``build_seconds`` (e.g. from
+    :func:`build_timed`) is stamped onto every point of the sweep."""
     if base_params is not None and k is not None:
         raise ValueError("pass either base_params or k, not both")
     base = base_params or SearchParams(k=k if k is not None else 10)
@@ -86,7 +111,8 @@ def qps_recall_curve(target, ds: Dataset, *, k: int | None = None,
     for ef in ef_sweep:
         tr = 0.95 if ef >= 96 else 0.0   # adaptive-EF variants engage high-recall mode
         p = dataclasses.replace(base, ef=ef, target_recall=tr)
-        pts.append(measure_point(target, ds, params=p, repeats=repeats))
+        pts.append(measure_point(target, ds, params=p, repeats=repeats,
+                                 build_seconds=build_seconds))
     return pts
 
 

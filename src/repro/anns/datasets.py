@@ -8,6 +8,7 @@ non-trivial local intrinsic dimension so graph quality actually matters
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -94,7 +95,10 @@ def exact_ground_truth(base: np.ndarray, queries: np.ndarray, k: int,
 def make_dataset(name: str, n_base: int = 20000, n_query: int = 200,
                  k_gt: int = 100, seed: int = 0) -> Dataset:
     spec = DATASET_SPECS[name]
-    rng = np.random.default_rng(seed + hash(name) % (2 ** 31))
+    # crc32, not hash(): str hashing is salted per process, and a shipped
+    # index (ckpt.save_index/load_index) must land on the *same* synthetic
+    # dataset when the serving host regenerates it.
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (2 ** 31))
     base = _clustered(rng, n_base, spec.dim, spec.clusters)
     queries = _clustered(rng, n_query, spec.dim, spec.clusters)
     if spec.metric == "angular":

@@ -17,6 +17,7 @@ directly with :class:`~repro.anns.api.SearchParams` /
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -42,6 +43,19 @@ class VariantConfig:
     # -- refinement module (§6.3) ----------------------------------------
     quantized_prefilter: bool = False
     rerank_factor: int = 2
+    # -- ivf module (partition family; inert for graph backends) ---------
+    nlist: int = 64                  # k-means cells
+    nprobe: int = 8                  # cells probed at the default ef=64
+    kmeans_iters: int = 8            # coarse-quantizer training iterations
+
+    def __post_init__(self):
+        # fail fast on unknown families: a typo'd backend name would
+        # otherwise surface only when the first search runs.  The lazy
+        # registry makes this check import-free.
+        if self.backend not in registry.available():
+            raise ValueError(
+                f"unknown ANNS backend {self.backend!r}; registered: "
+                f"{list(registry.available())}")
 
     def describe(self) -> str:
         return (f"[{self.backend}] R={self.degree} "
@@ -49,7 +63,8 @@ class VariantConfig:
                 f"rounds={self.nn_descent_rounds} a={self.alpha} "
                 f"eps={self.num_entry_points} adEF={self.adaptive_ef_coef} "
                 f"g={self.gather_width} pat={self.patience} "
-                f"q8={int(self.quantized_prefilter)} rr={self.rerank_factor}")
+                f"q8={int(self.quantized_prefilter)} rr={self.rerank_factor} "
+                f"nlist={self.nlist} npr={self.nprobe} km={self.kmeans_iters}")
 
 
 # the paper's baseline (GLASS defaults, §3.5): single entry point, fixed ef,
@@ -58,6 +73,50 @@ GLASS_BASELINE = VariantConfig(
     backend="graph", degree=32, ef_construction=64, nn_descent_rounds=4,
     alpha=1.0, num_entry_points=1, adaptive_ef_coef=0.0, gather_width=1,
     patience=0, quantized_prefilter=False, rerank_factor=1)
+
+# the partition-family analogue of GLASS: untuned FAISS-style IVF defaults
+# (sqrt(N)-ish cells at bench scale, modest probe budget, plain rerank).
+IVF_BASELINE = VariantConfig(
+    backend="ivf", nlist=64, nprobe=8, kmeans_iters=8, rerank_factor=2)
+
+# One canonical baseline variant per backend family: the reference point
+# each family's banded-AUC reward is normalised against (see
+# repro.core.reward.FamilyBaselines) so rewards stay comparable when the
+# policy picks the algorithm family itself.
+FAMILY_BASELINE_VARIANTS = {
+    "graph": GLASS_BASELINE,
+    "brute_force": dataclasses.replace(GLASS_BASELINE,
+                                       backend="brute_force"),
+    "quantized_prefilter": dataclasses.replace(
+        GLASS_BASELINE, backend="quantized_prefilter", rerank_factor=2),
+    "ivf": IVF_BASELINE,
+}
+
+
+def family_baseline(backend: str) -> VariantConfig:
+    """Baseline variant for a backend family (GLASS knobs for unknown /
+    third-party families, with the family's own backend key)."""
+    try:
+        return FAMILY_BASELINE_VARIANTS[backend]
+    except KeyError:
+        return dataclasses.replace(GLASS_BASELINE, backend=backend)
+
+
+_ENGINE_DEPRECATION_EMITTED = False
+
+
+def _warn_engine_deprecated():
+    """One DeprecationWarning per process — not one per Engine(): the RL
+    loop constructs hundreds of facades per run."""
+    global _ENGINE_DEPRECATION_EMITTED
+    if not _ENGINE_DEPRECATION_EMITTED:
+        _ENGINE_DEPRECATION_EMITTED = True
+        warnings.warn(
+            "repro.anns.engine.Engine is a compatibility facade; new code "
+            "should create backends via repro.anns.registry "
+            "(registry.create(name, variant)) and call "
+            "search(queries, SearchParams(...)) directly.",
+            DeprecationWarning, stacklevel=3)
 
 
 class Engine:
@@ -69,6 +128,7 @@ class Engine:
 
     def __init__(self, variant: VariantConfig, metric: str = "l2",
                  seed: int = 0):
+        _warn_engine_deprecated()
         self.variant = variant
         self.metric = metric
         self.seed = seed

@@ -1,0 +1,18 @@
+"""IVF (inverted-file) coarse-quantizer subsystem.
+
+- :mod:`repro.anns.ivf.kmeans` — mini-batch Lloyd's trainer whose
+  assignment step runs through the Pallas distance/top-k kernels, with a
+  pure-numpy reference twin for parity tests.
+- :mod:`repro.anns.ivf.layout` — cell-major CSR-style layout
+  (:class:`IvfIndex`): contiguous per-cell blocks + offsets + id remap +
+  int8 per-cell codes, so probe scans are dense kernel calls.
+
+The ``"ivf"`` search backend over this state lives in
+:mod:`repro.anns.backends.ivf` (registered in ``repro.anns.registry``).
+"""
+from repro.anns.ivf.kmeans import (assign, assign_ref, kmeans_fit,
+                                   kmeans_ref, lloyd_step)
+from repro.anns.ivf.layout import IvfIndex, build_ivf, ivf_stats
+
+__all__ = ["assign", "assign_ref", "kmeans_fit", "kmeans_ref", "lloyd_step",
+           "IvfIndex", "build_ivf", "ivf_stats"]

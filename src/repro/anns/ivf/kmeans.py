@@ -1,0 +1,152 @@
+"""Mini-batch Lloyd's k-means for the IVF coarse quantizer.
+
+Assignment — the O(n * nlist * d) hot loop — runs through the existing
+Pallas kernels (``kernels.distance.pairwise_distance`` for the MXU
+distance matrix, ``kernels.topk.topk_smallest`` with k=1 for the argmin),
+so training the quantizer exercises exactly the ops the search path uses.
+Centroid updates are cheap (nlist * d) and stay in numpy on the host.
+
+A pure-numpy reference (:func:`assign_ref`, :func:`kmeans_ref`) mirrors
+the same float32 arithmetic for the parity tests; determinism comes from a
+single ``np.random.default_rng(seed)`` driving init, mini-batch sampling,
+and empty-cell reseeding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.distance.ops import pairwise_distance
+from repro.kernels.topk.ops import topk_smallest
+
+#: vectors assigned per kernel launch (tile-aligned, bounds device memory)
+ASSIGN_CHUNK = 4096
+
+
+# ---------------------------------------------------------------------------
+# assignment
+# ---------------------------------------------------------------------------
+
+def assign(x: np.ndarray, centroids: np.ndarray, *, metric: str = "l2",
+           use_kernel: bool = True,
+           chunk: int = ASSIGN_CHUNK) -> tuple[np.ndarray, np.ndarray]:
+    """Nearest centroid per vector: (n, d) x (C, d) -> (ids (n,), dists (n,)).
+
+    Chunked over ``x``; each chunk is one ``pairwise_distance`` +
+    ``topk_smallest(k=1)`` kernel launch pair.
+    """
+    c = jnp.asarray(centroids, jnp.float32)
+    ids, dists = [], []
+    for lo in range(0, len(x), chunk):
+        d = pairwise_distance(jnp.asarray(x[lo: lo + chunk], jnp.float32), c,
+                              metric=metric, use_kernel=use_kernel)
+        v, i = topk_smallest(d, 1, use_kernel=use_kernel)
+        ids.append(np.asarray(i[:, 0]))
+        dists.append(np.asarray(v[:, 0]))
+    return (np.concatenate(ids).astype(np.int32),
+            np.concatenate(dists).astype(np.float32))
+
+
+def assign_ref(x: np.ndarray, centroids: np.ndarray,
+               *, metric: str = "l2") -> tuple[np.ndarray, np.ndarray]:
+    """Numpy oracle with the kernel's float32 expansion
+    (||q||^2 + ||x||^2 - 2 q.x for l2; -q.x for ip)."""
+    q = np.asarray(x, np.float32)
+    c = np.asarray(centroids, np.float32)
+    dots = q @ c.T
+    if metric == "ip":
+        d = -dots
+    else:
+        d = (np.sum(q * q, axis=1, dtype=np.float32)[:, None]
+             + np.sum(c * c, axis=1, dtype=np.float32)[None, :] - 2.0 * dots)
+    ids = np.argmin(d, axis=1).astype(np.int32)
+    return ids, d[np.arange(len(q)), ids].astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Lloyd's iterations
+# ---------------------------------------------------------------------------
+
+def _reseed_empty(centroids: np.ndarray, batch: np.ndarray,
+                  batch_counts: np.ndarray, dists: np.ndarray) -> int:
+    """Reseed zero-population cells to the batch points *farthest* from
+    their current centroid (deterministic; spreads coverage instead of
+    leaving dead cells).  Mutates ``centroids``; returns #reseeded."""
+    empty = np.flatnonzero(batch_counts == 0)
+    if len(empty) == 0:
+        return 0
+    far = np.argsort(-dists, kind="stable")[: len(empty)]
+    centroids[empty[: len(far)]] = batch[far]
+    return len(empty)
+
+
+def lloyd_step(x_batch: np.ndarray, centroids: np.ndarray,
+               counts: np.ndarray, *, metric: str = "l2",
+               use_kernel: bool = True, full_batch: bool = True) -> dict:
+    """One (mini-)batch Lloyd's update, in place on ``centroids``/``counts``.
+
+    ``full_batch=True`` is the classic Lloyd's step (cell mean);
+    otherwise the Sculley-style running-mean update with per-cell learning
+    rate ``batch_count / cumulative_count``.  ``use_kernel=False`` routes
+    assignment through the numpy oracle (the parity-test twin).  Returns
+    step telemetry.
+    """
+    if use_kernel:
+        a, dists = assign(x_batch, centroids, metric=metric)
+    else:
+        a, dists = assign_ref(x_batch, centroids, metric=metric)
+    nlist = len(centroids)
+    batch_counts = np.bincount(a, minlength=nlist)
+    sums = np.zeros_like(centroids, dtype=np.float64)
+    np.add.at(sums, a, x_batch.astype(np.float64))
+    hit = batch_counts > 0
+    means = np.zeros_like(centroids)
+    means[hit] = (sums[hit] / batch_counts[hit, None]).astype(np.float32)
+    if full_batch:
+        counts[:] = batch_counts
+        centroids[hit] = means[hit]
+    else:
+        counts += batch_counts
+        eta = np.zeros(nlist, np.float32)
+        eta[hit] = batch_counts[hit] / np.maximum(counts[hit], 1)
+        centroids[hit] += eta[hit, None] * (means[hit] - centroids[hit])
+    n_reseeded = _reseed_empty(centroids, x_batch, batch_counts, dists)
+    return {"assign": a, "batch_counts": batch_counts,
+            "n_reseeded": n_reseeded,
+            "inertia": float(np.sum(np.maximum(dists, 0.0)))}
+
+
+def kmeans_fit(x: np.ndarray, nlist: int, *, iters: int = 8,
+               batch_size: int = 4096, metric: str = "l2", seed: int = 0,
+               use_kernel: bool = True) -> np.ndarray:
+    """Train ``nlist`` centroids on (n, d) ``x``; returns (nlist, d) f32.
+
+    Full-batch Lloyd's when ``n <= batch_size`` (exact cell means per
+    iteration), mini-batch running means otherwise.  ``nlist`` is clamped
+    to ``n``.  Angular ("ip") centroids are re-normalised each step
+    (spherical k-means) so coarse scores stay comparable.
+    """
+    x = np.ascontiguousarray(np.asarray(x, np.float32))
+    n = len(x)
+    nlist = max(1, min(nlist, n))
+    rng = np.random.default_rng(seed)
+    centroids = x[rng.choice(n, size=nlist, replace=False)].copy()
+    counts = np.zeros(nlist, np.int64)
+    full = n <= batch_size
+    for _ in range(max(1, iters)):
+        batch = x if full else x[rng.choice(n, size=batch_size, replace=False)]
+        lloyd_step(batch, centroids, counts, metric=metric,
+                   use_kernel=use_kernel, full_batch=full)
+        if metric == "ip":
+            centroids /= np.maximum(
+                np.linalg.norm(centroids, axis=1, keepdims=True), 1e-9)
+    return centroids
+
+
+def kmeans_ref(x: np.ndarray, nlist: int, *, iters: int = 8,
+               batch_size: int = 4096, metric: str = "l2",
+               seed: int = 0) -> np.ndarray:
+    """Pure-numpy twin of :func:`kmeans_fit` (assignment via
+    :func:`assign_ref`); same RNG stream, same update arithmetic."""
+    return kmeans_fit(x, nlist, iters=iters, batch_size=batch_size,
+                      metric=metric, seed=seed, use_kernel=False)

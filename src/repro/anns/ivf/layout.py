@@ -1,0 +1,116 @@
+"""Cell-major IVF layout: contiguous per-cell vector blocks.
+
+The built state is CSR-style — vectors are permuted so each cell's members
+occupy one contiguous block (``offsets[c]:offsets[c+1]``), with ``ids``
+mapping a cell-major *position* back to the caller's original vector id.
+Contiguity is the point: a per-cell scan is a dense block read, and the
+padded ``cells`` view (one row of cell-major positions per cell, -1
+padded to a common width) turns an ``nprobe``-cell probe into a single
+rectangular gather + one dense distance call per query batch.
+
+Each block also carries int8 codes (symmetric per-vector quantization via
+the qdist kernel package's ``quantize_int8``) so the probe scan can run
+in int8 with the standalone fp32 rerank on top — the same
+prefilter/rerank split as ``backends/quantized.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.ivf.kmeans import assign, kmeans_fit
+from repro.kernels.common import round_up
+from repro.kernels.qdist.ops import quantize_int8
+
+
+@dataclass
+class IvfIndex:
+    centroids: jax.Array       # (C, d) f32 coarse quantizer
+    cells: jax.Array           # (C, pad) int32 cell-major positions, -1 pad
+    ids: jax.Array             # (N,) int32 cell-major position -> original id
+    base: jax.Array            # (N, d) f32, cell-major order
+    base_q: jax.Array          # (N, d) int8 codes, cell-major order
+    scales: jax.Array          # (N,) f32 dequant scales
+    offsets: np.ndarray        # (C+1,) int64 CSR cell boundaries (host)
+    metric: str                # "l2" | "ip"
+
+    @property
+    def n(self) -> int:
+        return int(self.base.shape[0])
+
+    @property
+    def nlist(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def cell_pad(self) -> int:
+        return int(self.cells.shape[1])
+
+    def min_cells_for(self, k: int) -> int:
+        """Smallest j such that *any* j cells jointly hold >= k vectors
+        (the j smallest cells are the worst case).  The sorted cumulative
+        cell sizes are immutable after build, so they are computed once
+        and cached off the serving hot path."""
+        cum = getattr(self, "_sizes_cum", None)
+        if cum is None:
+            cum = np.cumsum(np.sort(np.diff(self.offsets)))
+            self._sizes_cum = cum
+        return int(np.searchsorted(cum, min(k, self.n)) + 1)
+
+
+def _padded_cells(offsets: np.ndarray, nlist: int) -> np.ndarray:
+    """(C, pad) rows of cell-major positions, -1 beyond each cell's size.
+    ``pad`` is the max cell size rounded up to a sublane multiple so the
+    probe gather stays tile-friendly."""
+    counts = np.diff(offsets)
+    pad = round_up(max(int(counts.max(initial=1)), 1), 8)
+    cells = np.full((nlist, pad), -1, np.int32)
+    for c in range(nlist):
+        lo, hi = int(offsets[c]), int(offsets[c + 1])
+        cells[c, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
+    return cells
+
+
+def build_ivf(base: np.ndarray, *, nlist: int, kmeans_iters: int = 8,
+              metric: str = "l2", seed: int = 0,
+              use_kernel: bool = True) -> IvfIndex:
+    """Train the coarse quantizer, then lay the base out cell-major."""
+    base = np.ascontiguousarray(np.asarray(base, np.float32))
+    n = len(base)
+    nlist = max(1, min(nlist, n))
+    centroids = kmeans_fit(base, nlist, iters=kmeans_iters, metric=metric,
+                           seed=seed, use_kernel=use_kernel)
+    a, _ = assign(base, centroids, metric=metric, use_kernel=use_kernel)
+
+    order = np.argsort(a, kind="stable").astype(np.int32)   # position -> id
+    counts = np.bincount(a, minlength=nlist)
+    offsets = np.zeros(nlist + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    base_cm = base[order]
+    base_q, scales = quantize_int8(jnp.asarray(base_cm))
+    return IvfIndex(
+        centroids=jnp.asarray(centroids),
+        cells=jnp.asarray(_padded_cells(offsets, nlist)),
+        ids=jnp.asarray(order),
+        base=jnp.asarray(base_cm),
+        base_q=base_q,
+        scales=scales,
+        offsets=offsets,
+        metric=metric)
+
+
+def ivf_stats(index: IvfIndex) -> dict:
+    counts = np.diff(index.offsets)
+    return {
+        "n": index.n,
+        "nlist": index.nlist,
+        "cell_pad": index.cell_pad,
+        "mean_cell": float(counts.mean()),
+        "max_cell": int(counts.max(initial=0)),
+        "empty_cells": int((counts == 0).sum()),
+        # padding overhead of the dense probe view vs the CSR blocks
+        "pad_overhead": float(index.nlist * index.cell_pad / max(index.n, 1)),
+    }

@@ -1,7 +1,13 @@
 """String-keyed backend registry for :class:`repro.anns.api.AnnsIndex`.
 
-Built-in backends (loaded lazily, so importing this module is cheap and
-cycle-free):
+Built-in backends are *lazy*: the registry knows their names and module
+paths up front, but a backend module (and the jax/Pallas stack it pulls
+in) is imported only when that backend is first requested.  Importing
+this module — or calling :func:`available` / :func:`list_backends` — is
+cheap and jax-free, so CLI drivers can validate ``--backend`` flags and
+print help without paying kernel import time.
+
+Built-ins:
 
 - ``"graph"``               — beam search over the flat fixed-degree graph
                               (the seed engine, unchanged behavior).
@@ -11,6 +17,9 @@ cycle-free):
 - ``"quantized_prefilter"`` — int8 graph prefilter + fp32 rerank, lifted
                               out of the beam-search ``quantized`` flag
                               into a composable backend.
+- ``"ivf"``                 — k-means cells (Pallas-assigned coarse
+                              quantizer) + dense per-cell int8 scans +
+                              fp32 rerank, cell-major layout.
 
 Adding a backend::
 
@@ -34,10 +43,19 @@ name.
 """
 from __future__ import annotations
 
+import importlib
 from typing import Callable, Dict, Type
 
 _REGISTRY: Dict[str, type] = {}
-_BUILTINS_LOADED = False
+
+# name -> defining module; importing the module runs its @register
+# decorator, which fills _REGISTRY.  Keys only — no jax import cost.
+_BUILTIN_MODULES: Dict[str, str] = {
+    "graph": "repro.anns.backends.graph_beam",
+    "brute_force": "repro.anns.backends.brute_force",
+    "quantized_prefilter": "repro.anns.backends.quantized",
+    "ivf": "repro.anns.backends.ivf",
+}
 
 
 def register(name: str) -> Callable[[type], type]:
@@ -50,23 +68,17 @@ def register(name: str) -> Callable[[type], type]:
     return deco
 
 
-def _ensure_builtins() -> None:
-    global _BUILTINS_LOADED
-    if not _BUILTINS_LOADED:
-        _BUILTINS_LOADED = True
-        # side-effect import: each module registers its backend class
-        from repro.anns import backends  # noqa: F401
-
-
 def get(name: str) -> Type:
-    """Backend class for ``name``; raises KeyError listing known names."""
-    _ensure_builtins()
+    """Backend class for ``name``; raises KeyError listing known names.
+    Lazily imports the defining module for built-ins on first use."""
+    if name not in _REGISTRY and name in _BUILTIN_MODULES:
+        importlib.import_module(_BUILTIN_MODULES[name])
     try:
         return _REGISTRY[name]
     except KeyError:
         raise KeyError(
             f"unknown ANNS backend {name!r}; registered: "
-            f"{sorted(_REGISTRY)}") from None
+            f"{list(available())}") from None
 
 
 def create(name: str, variant=None, *, metric: str = "l2", seed: int = 0):
@@ -76,6 +88,11 @@ def create(name: str, variant=None, *, metric: str = "l2", seed: int = 0):
 
 
 def available() -> tuple:
-    """Sorted names of all registered backends."""
-    _ensure_builtins()
-    return tuple(sorted(_REGISTRY))
+    """Sorted names of all registered + built-in backends (no imports)."""
+    return tuple(sorted(set(_REGISTRY) | set(_BUILTIN_MODULES)))
+
+
+def list_backends() -> tuple:
+    """Alias of :func:`available` for CLI drivers
+    (``table3_qps_recall.py --backends all`` expands through this)."""
+    return available()

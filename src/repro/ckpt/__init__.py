@@ -1,4 +1,6 @@
 from repro.ckpt.checkpoint import save_checkpoint, load_checkpoint
+from repro.ckpt.index_io import load_index, save_index
 from repro.ckpt.manager import CheckpointManager
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
+           "save_index", "load_index"]

@@ -1,0 +1,60 @@
+"""Ship built ANNS indexes through the checkpoint layer.
+
+A built index (k-means cells + cell-major blocks for IVF, adjacency for
+graph, ...) is expensive to rebuild and deterministic only per seed —
+serving hosts should receive the *built state*, not a recipe.  Every
+backend already snapshots itself to plain numpy via ``to_state_dict()``;
+these helpers drop that snapshot into the sharded checkpoint format
+(msgpack + optional zstd, atomic replace) and restore it through the
+registry on the other side:
+
+    from repro import ckpt
+    ckpt.save_index("idx.ckpt", backend)
+    ...                                      # ship the directory
+    backend = ckpt.load_index("idx.ckpt")    # serving host: no rebuild
+
+Array leaves travel in the shard file; non-array fields (backend name,
+metric) ride in the manifest's ``extra`` block, so restore knows which
+registry entry to instantiate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint
+
+INDEX_META_KEY = "anns_index_meta"
+
+
+def save_index(path: str, backend, *, step: int = 0,
+               extra: dict | None = None) -> None:
+    """Checkpoint a built backend's ``to_state_dict()`` snapshot."""
+    state = backend.to_state_dict()
+    arrays = {k: np.asarray(v) for k, v in state.items()
+              if isinstance(v, np.ndarray)}
+    meta = {k: v for k, v in state.items() if not isinstance(v, np.ndarray)}
+    if "backend" not in meta:
+        meta["backend"] = backend.name
+    save_checkpoint(path, arrays, step,
+                    extra={INDEX_META_KEY: meta, **(extra or {})})
+
+
+def load_index(path: str, variant=None, *, seed: int = 0):
+    """Restore a backend instance from :func:`save_index` output.
+
+    The backend class is resolved by registry name from the checkpoint
+    itself; ``variant`` (optional) supplies search-time knob defaults —
+    build-time state comes entirely from the snapshot.
+    """
+    from repro.anns import registry
+
+    arrays, _step, extra = load_checkpoint(path)
+    meta = extra.get(INDEX_META_KEY)
+    if meta is None:
+        raise KeyError(
+            f"{path!r} is not an index checkpoint (missing "
+            f"{INDEX_META_KEY!r} in manifest extra)")
+    backend = registry.create(meta["backend"], variant,
+                              metric=meta.get("metric", "l2"), seed=seed)
+    backend.from_state_dict({**arrays, **meta})
+    return backend

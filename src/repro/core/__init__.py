@@ -12,11 +12,14 @@ from repro.core.exemplar_db import ExemplarDB
 from repro.core.grpo import GRPOConfig, group_advantages, grpo_loss
 from repro.core.optimizer_loop import CrinnOptimizer, LoopConfig
 from repro.core.policy import Policy
-from repro.core.reward import RewardResult, banded_auc, speed_reward
-from repro.core.variant_space import MODULE_ORDER, MODULES, Program
+from repro.core.reward import (FamilyBaselines, RewardResult, banded_auc,
+                               speed_reward)
+from repro.core.variant_space import (BACKEND_CHOICES, MODULE_ORDER, MODULES,
+                                      Program)
 
 __all__ = [
     "ExemplarDB", "GRPOConfig", "group_advantages", "grpo_loss",
     "CrinnOptimizer", "LoopConfig", "Policy", "RewardResult", "banded_auc",
-    "speed_reward", "MODULE_ORDER", "MODULES", "Program",
+    "speed_reward", "FamilyBaselines", "BACKEND_CHOICES", "MODULE_ORDER",
+    "MODULES", "Program",
 ]

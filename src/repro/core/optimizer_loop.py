@@ -24,15 +24,16 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro.anns import registry
 from repro.anns.api import SearchParams
 from repro.anns.bench import CurvePoint, measure_point
 from repro.anns.datasets import Dataset
-from repro.anns.engine import Engine, GLASS_BASELINE, VariantConfig
+from repro.anns.engine import GLASS_BASELINE, VariantConfig, family_baseline
 from repro.core import prompting
 from repro.core.exemplar_db import ExemplarDB
 from repro.core.grpo import GRPOConfig, group_advantages, grpo_loss_and_grad
 from repro.core.policy import Policy, Rollout
-from repro.core.reward import RewardResult, speed_reward
+from repro.core.reward import FamilyBaselines, RewardResult, banded_auc
 from repro.core.variant_space import (MODULE_ORDER, Program,
                                       program_from_variant)
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -76,40 +77,56 @@ class CrinnOptimizer:
         self.db = ExemplarDB(tau=loop.tau)
         self.rng = np.random.default_rng(loop.seed)
         self.key = jax.random.PRNGKey(loop.seed)
-        self._index_cache: dict[tuple, Engine] = {}
+        self._index_cache: dict[tuple, object] = {}   # built AnnsIndex backends
         self.history: list[IterationLog] = []
 
         # paper-faithful starting point: GLASS baseline, reward 1.0
         self.current = GLASS_BASELINE
-        self.baseline_auc: float | None = None
+        self.baselines = FamilyBaselines()
         self._jit_update = None
+
+    @property
+    def baseline_auc(self) -> float:
+        """Legacy view: the graph family's baseline AUC (0.0 until the
+        first graph-family evaluation fills the bank)."""
+        return self.baselines.get("graph")
 
     # ------------------------------------------------------------------
     # Engine evaluation
     # ------------------------------------------------------------------
     def _construction_key(self, v: VariantConfig) -> tuple:
-        # the backend family is part of the build identity: different
-        # backends build different state from the same knobs.
+        # the backend family is part of the build identity, and only the
+        # knobs that family's build actually consumes belong in the key —
+        # otherwise sweeping an inert knob (say nlist under a graph
+        # backend) would force spurious rebuilds of identical state.
+        if v.backend == "ivf":
+            return (v.backend, v.nlist, v.kmeans_iters)
+        if v.backend == "brute_force":
+            return (v.backend,)
         return (v.backend, v.degree, v.ef_construction, v.nn_descent_rounds,
                 v.alpha, v.num_entry_points)
 
-    def _engine_for(self, v: VariantConfig) -> Engine:
+    def _engine_for(self, v: VariantConfig):
+        """A backend for ``v`` sharing the cached built state (registry
+        construction, not the deprecated Engine facade)."""
         key = self._construction_key(v)
-        eng = self._index_cache.get(key)
-        if eng is None:
-            eng = Engine(v, metric=self.ds.metric, seed=self.loop.seed)
-            eng.build_index(self.ds.base)
-            self._index_cache[key] = eng
+        built = self._index_cache.get(key)
+        if built is None:
+            built = registry.create(v.backend, v, metric=self.ds.metric,
+                                    seed=self.loop.seed)
+            built.build(self.ds.base)
+            self._index_cache[key] = built
         if (v.quantized_prefilter
-                and getattr(eng.index, "base_q", "na") is None):
+                and getattr(built.index, "base_q", "na") is None):
             # graph-family state built without codes: patch them in so the
             # cached build is reusable across refinement variants
             from repro.kernels.qdist.ops import quantize_int8
-            bq, sc = quantize_int8(eng.index.base)
-            eng.index.base_q, eng.index.scales = bq, sc
-        e2 = Engine(v, metric=self.ds.metric, seed=self.loop.seed)
-        e2.index = eng.index
-        return e2
+            bq, sc = quantize_int8(built.index.base)
+            built.index.base_q, built.index.scales = bq, sc
+        backend = registry.create(v.backend, v, metric=self.ds.metric,
+                                  seed=self.loop.seed)
+        backend.index = built.index
+        return backend
 
     def curve(self, v: VariantConfig) -> list[CurvePoint]:
         eng = self._engine_for(v)
@@ -122,12 +139,18 @@ class CrinnOptimizer:
         return pts
 
     def evaluate(self, v: VariantConfig) -> RewardResult:
-        if self.baseline_auc is None:
-            base_pts = self.curve(GLASS_BASELINE)
-            r = speed_reward(base_pts, baseline_auc=1.0)
-            self.baseline_auc = max(r.auc, 1e-9)
+        family = v.backend
+        if not self.baselines.has(family):
+            # one-time baseline sweep for this family (eq. comparable
+            # rewards across families: each candidate is scored against
+            # its own family's canonical baseline variant)
+            base_pts = self.curve(family_baseline(family))
+            auc, _ = banded_auc(
+                np.array([p.recall for p in base_pts], float),
+                np.array([p.qps for p in base_pts], float))
+            self.baselines.set(family, auc)
         pts = self.curve(v)
-        return speed_reward(pts, baseline_auc=self.baseline_auc)
+        return self.baselines.reward(family, pts)
 
     # ------------------------------------------------------------------
     # GRPO update

@@ -22,9 +22,9 @@ from repro.core.variant_space import MODULES, MODULE_ORDER, Program, knob_count
 # Vocab layout
 # ---------------------------------------------------------------------------
 PAD, BOS, EOS, GEN, EXEMPLAR = 0, 1, 2, 3, 4
-MODULE_BASE = 8                                   # 8..10: module tags
+MODULE_BASE = 8                                   # one tag per MODULE_ORDER entry
 NUM_SCORE_BUCKETS = 32
-SCORE_BASE = MODULE_BASE + len(MODULE_ORDER)      # 11..42: score buckets
+SCORE_BASE = MODULE_BASE + len(MODULE_ORDER)      # then the score buckets
 
 _knob_base: dict[tuple[str, str], int] = {}
 _cursor = SCORE_BASE + NUM_SCORE_BUCKETS

@@ -85,3 +85,42 @@ def speed_reward(points, baseline_auc: float,
     rel = auc / baseline_auc
     return RewardResult(auc=auc, rel=rel, reward=smooth(rel),
                         n_band_points=n_in, valid=True)
+
+
+class FamilyBaselines:
+    """Per-algorithm-family baseline AUCs.
+
+    With the backend family inside the GRPO action space, one global
+    baseline would let the fastest *family* dominate the reward signal:
+    a mediocre IVF config could out-reward a well-tuned graph config
+    purely because partitioned scans are cheaper at bench scale (or vice
+    versa), and the within-family gradient — the thing the policy is
+    supposed to learn — would vanish.  Normalising each candidate against
+    its *own family's* canonical baseline keeps ``reward = smooth(relative
+    improvement within family)`` comparable across families.
+
+    The bank is lazily filled by the optimizer loop: the first candidate
+    of a family triggers one baseline sweep (see
+    ``repro.anns.engine.family_baseline`` for the canonical variants).
+    Families whose baseline curve never enters the recall band (e.g.
+    ``brute_force``, pinned at recall 1.0) keep AUC 0.0 and every
+    candidate in the family scores 0 via ``speed_reward``'s invalid path.
+    """
+
+    def __init__(self):
+        self._auc: dict[str, float] = {}
+
+    def has(self, family: str) -> bool:
+        return family in self._auc
+
+    def set(self, family: str, auc: float) -> float:
+        self._auc[family] = float(auc)
+        return self._auc[family]
+
+    def get(self, family: str, default: float = 0.0) -> float:
+        return self._auc.get(family, default)
+
+    def reward(self, family: str, points,
+               lo: float = RECALL_LO, hi: float = RECALL_HI) -> RewardResult:
+        """Banded-AUC reward for ``points`` against ``family``'s baseline."""
+        return speed_reward(points, self.get(family), lo=lo, hi=hi)

@@ -21,15 +21,18 @@ from dataclasses import dataclass
 
 from repro.anns.engine import VariantConfig
 
-# Backend families the registry exposes (repro.anns.registry).  Not yet a
-# grammar knob: the reward landscape across whole algorithm families needs
-# per-family baselines first (see ROADMAP "backend choice inside the GRPO
-# action space").  ``VariantConfig.backend`` already carries the choice, so
-# promoting this tuple into MODULES is the only change needed later.
-BACKEND_CHOICES = ("graph", "brute_force", "quantized_prefilter")
+# Backend families the registry exposes (repro.anns.registry).  Promoted
+# into MODULES as the "backend" module: the policy picks the algorithm
+# family itself, with per-family reward baselines
+# (repro.core.reward.FamilyBaselines) keeping banded-AUC comparable
+# across families.
+BACKEND_CHOICES = ("graph", "brute_force", "quantized_prefilter", "ivf")
 
 # module name -> ordered list of (knob, choices)
 MODULES: dict[str, list[tuple[str, tuple]]] = {
+    "backend": [
+        ("backend", BACKEND_CHOICES),
+    ],
     "graph_construction": [
         ("degree", (16, 24, 32, 48, 64)),
         ("ef_construction", (32, 48, 64, 96, 128, 192)),
@@ -42,13 +45,30 @@ MODULES: dict[str, list[tuple[str, tuple]]] = {
         ("gather_width", (1, 2, 4)),
         ("patience", (0, 2, 4, 8)),
     ],
+    # partition-family knobs (inert while backend is a graph family —
+    # rewards flatten and the GRPO advantage is 0, so sampling them is
+    # harmless; decisive once the backend module picks "ivf").
+    # rerank_factor is deliberately shared with "refinement": both stages
+    # own the same VariantConfig field, and each run_module seeds its DB
+    # with the inherited value, so a tuned choice survives the later
+    # stage unless a resample measurably beats it.
+    "ivf": [
+        ("nlist", (16, 32, 64, 128, 256)),
+        ("nprobe", (1, 2, 4, 8, 16, 32)),
+        ("kmeans_iters", (2, 4, 8, 16)),
+        ("rerank_factor", (1, 2, 4, 8)),
+    ],
     "refinement": [
         ("quantized_prefilter", (False, True)),
         ("rerank_factor", (1, 2, 4, 8)),
     ],
 }
 
-MODULE_ORDER = ("graph_construction", "search", "refinement")
+# progressive optimization order (§3.1), coarsest decision first: pick
+# the family, tune its construction, tune search, tune the partition
+# knobs, then shared refinement.
+MODULE_ORDER = ("backend", "graph_construction", "search", "ivf",
+                "refinement")
 
 
 def knob_count(module: str) -> int:

@@ -3,10 +3,15 @@ batched queries (the paper's deployment artifact), plus an optional policy
 generation service.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset sift-128-euclidean \
-        --n-base 5000 --n-requests 256 --ef 64 --backend graph
+        --n-base 5000 --n-requests 256 --ef 64 --backend ivf
 
 Any backend registered in ``repro.anns.registry`` can be served by name
 (``--backend brute_force`` gives the exact-search reference deployment).
+
+Built indexes ship without a rebuild: ``--save-index DIR`` checkpoints
+the built state after the build, ``--load-index DIR`` restores it on a
+serving host (skipping the build entirely; the backend comes from the
+checkpoint itself).
 """
 import argparse
 import time
@@ -25,12 +30,18 @@ def main():
                     help="ANNS backend name (see repro.anns.registry)")
     ap.add_argument("--optimized", action="store_true",
                     help="serve the CRINN-optimized variant instead of GLASS")
+    ap.add_argument("--save-index", metavar="DIR", default=None,
+                    help="checkpoint the built index state to DIR")
+    ap.add_argument("--load-index", metavar="DIR", default=None,
+                    help="serve a previously checkpointed index from DIR "
+                         "(no rebuild; overrides --backend)")
     args = ap.parse_args()
 
     import dataclasses
 
     import numpy as np
-    from repro.anns import Engine, SearchParams, make_dataset, registry
+    from repro import ckpt
+    from repro.anns import SearchParams, make_dataset, registry
     from repro.anns.datasets import recall_at_k
     from repro.anns.engine import GLASS_BASELINE, VariantConfig
     from repro.runtime.server import AnnsServer
@@ -46,14 +57,24 @@ def main():
                                 gather_width=2, patience=4,
                                 adaptive_ef_coef=14.5)
     variant = dataclasses.replace(variant, backend=args.backend)
-    print(f"building index ({variant.describe()}) ...")
-    t0 = time.time()
-    eng = Engine(variant, metric=ds.metric)
-    eng.build_index(ds.base)
-    print(f"built in {time.time()-t0:.1f}s "
-          f"({eng.memory_bytes()/1e6:.1f} MB resident)")
+    if args.load_index:
+        t0 = time.time()
+        target = ckpt.load_index(args.load_index)   # bare AnnsIndex backend
+        print(f"restored {target.name!r} index from {args.load_index} "
+              f"in {time.time()-t0:.1f}s "
+              f"({target.memory_bytes()/1e6:.1f} MB resident, no rebuild)")
+    else:
+        print(f"building index ({variant.describe()}) ...")
+        t0 = time.time()
+        target = registry.create(args.backend, variant, metric=ds.metric)
+        target.build(ds.base)
+        print(f"built in {time.time()-t0:.1f}s "
+              f"({target.memory_bytes()/1e6:.1f} MB resident)")
+        if args.save_index:
+            ckpt.save_index(args.save_index, target)
+            print(f"index state checkpointed to {args.save_index}")
 
-    server = AnnsServer(eng, max_batch=args.max_batch,
+    server = AnnsServer(target, max_batch=args.max_batch,
                         params=SearchParams(k=args.k, ef=args.ef))
     rng = np.random.default_rng(0)
     order = rng.integers(0, len(ds.queries), size=args.n_requests)

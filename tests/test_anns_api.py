@@ -42,8 +42,27 @@ def exact_backend(ds):
 
 def test_registry_exposes_builtin_backends():
     names = registry.available()
-    for required in ("graph", "brute_force", "quantized_prefilter"):
+    for required in ("graph", "brute_force", "quantized_prefilter", "ivf"):
         assert required in names, names
+    assert registry.list_backends() == names
+
+
+def test_registry_import_is_jax_free():
+    """Importing the registry (and listing backends) must not pull the
+    jax/kernel stack — CLI flag validation stays cheap."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = (
+        "import sys; from repro.anns import registry; "
+        "names = registry.list_backends(); "
+        "assert 'ivf' in names, names; "
+        "assert 'jax' not in sys.modules, 'registry import pulled jax'"
+    )
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
 
 
 def test_registry_register_get_roundtrip():
@@ -129,6 +148,20 @@ def test_graph_agrees_with_brute_force_ground_truth(ds, graph_backend,
     assert rec > 0.9, rec
 
 
+def test_ivf_agrees_with_brute_force_ground_truth(ds, exact_backend):
+    """Cross-family agreement: the partition backend at saturating nprobe
+    must reproduce the exact anchor (see tests/test_ivf.py for the
+    acceptance-scale >=10k run)."""
+    b = registry.create("ivf", metric=ds.metric)
+    b.build(ds.base)
+    anchor = exact_backend.search(ds.queries, SearchParams(k=10))
+    res = b.search(ds.queries,
+                   SearchParams(k=10, ef=64 * b.index.nlist,
+                                rerank_factor=4))
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(anchor.ids), 10)
+    assert rec >= 0.99, rec
+
+
 def test_quantized_prefilter_backend_close_to_fp32(ds, graph_backend):
     b = registry.create(
         "quantized_prefilter",
@@ -167,6 +200,32 @@ def test_variant_backend_field_selects_backend(ds):
     assert eng.backend.name == "brute_force"
     ids, _ = eng.search(ds.queries, k=10, ef=64)
     assert recall_at_k(np.asarray(ids), ds.gt, 10) == 1.0
+
+
+def test_variant_unknown_backend_fails_fast():
+    """A typo'd backend name must fail at VariantConfig construction —
+    with the registered names in the message — not at first search."""
+    with pytest.raises(ValueError, match="no_such_backend"):
+        dataclasses.replace(GLASS_BASELINE, backend="no_such_backend")
+    with pytest.raises(ValueError, match="ivf"):     # message lists names
+        from repro.anns.engine import VariantConfig
+        VariantConfig(backend="no_such_backend")
+
+
+def test_engine_emits_single_deprecation_warning(ds):
+    """The facade warns exactly once per process, pointing at the
+    registry — not once per construction (the RL loop builds hundreds)."""
+    import warnings as _w
+
+    from repro.anns import engine as engine_mod
+    engine_mod._ENGINE_DEPRECATION_EMITTED = False     # reset process latch
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        Engine(GLASS_BASELINE, metric=ds.metric)
+        Engine(GLASS_BASELINE, metric=ds.metric)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "repro.anns.registry" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
 
 
 def test_state_dict_roundtrip(ds, graph_backend):

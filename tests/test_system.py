@@ -63,5 +63,8 @@ def test_crinn_loop_improves_or_matches_baseline(setup):
 
 
 def test_progressive_module_order(setup):
-    """The driver optimizes modules in the paper's order (§3.1)."""
-    assert MODULE_ORDER == ("graph_construction", "search", "refinement")
+    """The driver optimizes modules in the paper's order (§3.1), with the
+    backend-family choice first (coarsest decision) and the partition
+    knobs between search and the shared refinement stage."""
+    assert MODULE_ORDER == ("backend", "graph_construction", "search",
+                            "ivf", "refinement")
