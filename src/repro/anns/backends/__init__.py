@@ -16,6 +16,7 @@ _EXPORTS = {
     "BruteForceBackend": "repro.anns.backends.brute_force",
     "QuantizedPrefilterBackend": "repro.anns.backends.quantized",
     "IvfBackend": "repro.anns.backends.ivf",
+    "ShardedBackend": "repro.anns.backends.sharded",
 }
 
 __all__ = sorted(_EXPORTS)

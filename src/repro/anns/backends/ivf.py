@@ -42,6 +42,27 @@ def round_nprobe(nprobe: int) -> int:
     return snap_to_ladder(nprobe, NPROBE_LADDER, 128)
 
 
+def nprobe_for(variant, params: SearchParams, nlist: int) -> int:
+    """Map the universal ``ef`` effort knob onto nprobe: the variant's
+    ``nprobe`` at the default ef=64, scaled proportionally elsewhere,
+    snapped to the static ladder, clamped to the cell count.  Shared by
+    the ``ivf`` and ``sharded`` backends so a given (variant, params)
+    probes the *same* cells in both — the basis of their equivalence."""
+    ef = effective_ef(params.ef, params.target_recall,
+                      variant.adaptive_ef_coef)
+    raw = max(1, round(variant.nprobe * ef / 64))
+    return min(round_nprobe(raw), nlist)
+
+
+def shortlist_width(params: SearchParams, k: int, n: int, nprobe: int,
+                    cell_pad: int) -> int:
+    """Rerank shortlist width m: ``rerank_factor * k`` capped by the base
+    size and by the probed block's width.  Shared with the sharded
+    backend (identical m keeps merged results identical)."""
+    m = max(k, min(max(params.rerank_factor, 1) * k, n))
+    return min(m, nprobe * cell_pad)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "nprobe", "k", "m", "metric", "quantized"))
 def _ivf_search(centroids, cells, ids, base, base_q, scales, queries, *,
@@ -102,17 +123,12 @@ class IvfBackend:
         v = self.variant
         self.index = build_ivf(base, nlist=v.nlist,
                                kmeans_iters=v.kmeans_iters,
-                               metric=self.metric, seed=self.seed)
+                               metric=self.metric, seed=self.seed,
+                               max_cell=getattr(v, "max_cell", 0) or None)
         return self.index
 
     def _nprobe_for(self, params: SearchParams) -> int:
-        """Map the universal ``ef`` effort knob onto nprobe: the variant's
-        ``nprobe`` at the default ef=64, scaled proportionally elsewhere,
-        snapped to the static ladder, clamped to the cell count."""
-        ef = effective_ef(params.ef, params.target_recall,
-                          self.variant.adaptive_ef_coef)
-        raw = max(1, round(self.variant.nprobe * ef / 64))
-        return min(round_nprobe(raw), self.index.nlist)
+        return nprobe_for(self.variant, params, self.index.nlist)
 
     def search(self, queries, params: SearchParams) -> SearchResult:
         assert self.index is not None, "build() first"
@@ -128,8 +144,7 @@ class IvfBackend:
         if nprobe < min_probe:
             nprobe = min(round_nprobe(min_probe), idx.nlist)
         # shortlist for the fp32 rerank; never wider than the probed block
-        m = max(k, min(max(p.rerank_factor, 1) * k, idx.n))
-        m = min(m, nprobe * idx.cell_pad)
+        m = shortlist_width(p, k, idx.n, nprobe, idx.cell_pad)
         # int8 scan is this backend's default; explicit quantized=False
         # falls back to fp32 cell scans (params win over backend defaults)
         quantized = True if params.quantized is None else bool(params.quantized)

@@ -1,0 +1,229 @@
+"""``"sharded"`` backend: cell-routed IVF over a device mesh.
+
+The scale-out path of the ROADMAP: the cell-major IVF layout is sliced
+into whole-cell shards (:mod:`repro.anns.ivf.sharding`), and one query
+batch runs as
+
+1. **coarse = routing** — the replicated centroids produce the top-nprobe
+   cells *and* with them the owning shards (``cell_shard`` is a static
+   map): a probed cell contributes candidates only on the shard that owns
+   it, every other shard sees a masked (pad) row.
+2. **per-shard scan** — each shard gathers its probed cells' padded rows
+   from its local table and scores them densely (int8 dequant by default,
+   fp32 via the replicated store when ``quantized=False``), keeping its
+   own top-``m`` shortlist.  The stage is a ``vmap`` over the leading
+   shard axis: on one device it is a loop; placed on a ``("shard",)``
+   mesh (:func:`repro.anns.ivf.sharding.place_on_mesh`) XLA partitions
+   it so every device scans only its resident slice.
+3. **merge = fp32 rerank** — per-shard shortlists are concatenated, cut
+   to the global top-``m`` by scan distance, and handed to the standalone
+   :func:`~repro.anns.backends.quantized.fp32_rerank` with their validity
+   mask (ragged shortlists never resurrect pad slots).
+
+Because the shard slices are byte-identical views of the unsharded
+arrays and every stage-width (nprobe, m) comes from the helpers shared
+with ``backends/ivf.py``, the merged results at any ``n_shards`` match
+the unsharded ``ivf`` backend — ``n_shards=1`` is bit-identical, and at
+max nprobe any shard count returns the same ids (the property tests pin
+both).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import search as search_lib
+from repro.anns.api import SearchParams, SearchResult
+from repro.anns.backends.ivf import (nprobe_for, round_nprobe,
+                                     shortlist_width)
+from repro.anns.backends.quantized import fp32_rerank
+from repro.anns.ivf.layout import build_ivf
+from repro.anns.ivf.sharding import (ShardedIvfIndex, place_on_mesh,
+                                     shard_ivf, sharded_stats)
+from repro.anns.registry import register
+from repro.kernels.distance.ops import pairwise_distance
+from repro.kernels.topk.ops import topk_smallest
+
+BIG = search_lib.BIG
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "nprobe", "k", "m", "metric", "quantized"))
+def _sharded_search(centroids, cell_shard, cell_row, cells, vec_start,
+                    base_q, scales, base, ids, queries, *,
+                    nprobe: int, k: int, m: int, metric: str,
+                    quantized: bool):
+    """(B, d) queries -> (ids (B, k) original ids, dists (B, k) fp32).
+
+    The shard axis is the leading axis of ``cells``/``vec_start``/
+    ``base_q``/``scales``; everything routed per shard stays inside the
+    vmapped body, so under a ``("shard",)`` placement the only
+    cross-device traffic is the coarse broadcast and the (S, B, m)
+    shortlist concat feeding the merge.
+    """
+    B = queries.shape[0]
+    n_shards, _, pad = cells.shape
+    q32 = queries.astype(jnp.float32)
+
+    dc = pairwise_distance(q32, centroids, metric=metric)       # (B, C)
+    _, probe = topk_smallest(dc, nprobe)                        # (B, nprobe)
+    owner = cell_shard[probe]                                   # routing
+    row = cell_row[probe]
+
+    m_shard = min(m, nprobe * pad)      # static: a shard never needs more
+
+    def per_shard(shard_id, cells_j, v0_j, bq_j, sc_j):
+        mine = owner == shard_id                                # (B, nprobe)
+        cand = cells_j[jnp.where(mine, row, 0)]                 # (B, np, pad)
+        cand = jnp.where(mine[..., None], cand, -1).reshape(B, -1)
+        valid = cand >= 0
+        pos = jnp.where(valid, cand, 0)                         # local pos
+        if quantized:
+            vecs = bq_j[pos].astype(jnp.float32) * sc_j[pos][..., None]
+        else:
+            vecs = base[v0_j + pos]
+        d = search_lib._qdist(q32, vecs, metric)
+        d = jnp.where(valid, d, BIG)
+        nd, keep = jax.lax.top_k(-d, m_shard)
+        gpos = jnp.take_along_axis(pos, keep, axis=1) + v0_j    # global pos
+        kept_valid = jnp.take_along_axis(valid, keep, axis=1)
+        return gpos, -nd, kept_valid, jnp.sum(valid)
+
+    gpos, d, valid, scanned = jax.vmap(per_shard)(
+        jnp.arange(n_shards, dtype=jnp.int32), cells, vec_start,
+        base_q, scales)
+
+    # merge: concat per-shard shortlists, cut to the global top-m by scan
+    # distance (every shard contributes at most m, so the union provably
+    # contains the unsharded top-m), then fp32-rerank with validity.
+    gpos = gpos.transpose(1, 0, 2).reshape(B, -1)               # (B, S*m)
+    d = d.transpose(1, 0, 2).reshape(B, -1)
+    valid = valid.transpose(1, 0, 2).reshape(B, -1)
+    m_total = min(m, n_shards * m_shard)
+    _, keep = jax.lax.top_k(-jnp.where(valid, d, BIG), m_total)
+    short = jnp.take_along_axis(gpos, keep, axis=1)
+    short_valid = jnp.take_along_axis(valid, keep, axis=1)
+    out_pos, out_d = fp32_rerank(base, q32, short, k=k, metric=metric,
+                                 valid=short_valid)
+    return ids[out_pos], out_d, jnp.sum(scanned)
+
+
+@register("sharded")
+class ShardedBackend:
+    """Cell-routed multi-shard IVF (see module docstring)."""
+
+    name = "sharded"
+
+    def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
+        if variant is None:
+            from repro.anns.engine import VariantConfig
+            variant = VariantConfig(backend="sharded")
+        self.variant = variant
+        self.metric = metric
+        self.seed = seed
+        self.index: ShardedIvfIndex | None = None
+
+    # -- AnnsIndex protocol ------------------------------------------------
+    def build(self, base: np.ndarray) -> ShardedIvfIndex:
+        """Build the unsharded cell-major index (same seed/knobs as the
+        ``ivf`` backend => identical cells), then slice it by cells."""
+        v = self.variant
+        inner = build_ivf(base, nlist=v.nlist, kmeans_iters=v.kmeans_iters,
+                          metric=self.metric, seed=self.seed,
+                          max_cell=getattr(v, "max_cell", 0) or None)
+        self.index = shard_ivf(inner, max(1, int(v.n_shards)))
+        return self.index
+
+    def place_on_mesh(self, mesh) -> None:
+        """Pin each shard's slice to its device on a ``("shard",)`` mesh
+        (see ``repro.launch.mesh.make_shard_mesh``)."""
+        assert self.index is not None, "build() first"
+        self.index = place_on_mesh(self.index, mesh)
+
+    def stats(self) -> dict:
+        assert self.index is not None, "build() first"
+        return sharded_stats(self.index)
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        assert self.index is not None, "build() first"
+        idx = self.index
+        p = params.resolved(self.variant)
+        k = min(p.k, idx.n)
+        nprobe = nprobe_for(self.variant, p, idx.nlist)
+        # same worst-case floor as the ivf backend: the probed cells must
+        # jointly hold k real vectors or the answer cannot fill k slots
+        min_probe = idx.min_cells_for(k)
+        if nprobe < min_probe:
+            nprobe = min(round_nprobe(min_probe), idx.nlist)
+        m = shortlist_width(p, k, idx.n, nprobe, idx.cell_pad)
+        quantized = True if params.quantized is None else bool(params.quantized)
+        out_ids, out_d, scanned = _sharded_search(
+            idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
+            idx.vec_start, idx.base_q, idx.scales, idx.base, idx.ids,
+            jnp.asarray(queries, jnp.float32),
+            nprobe=nprobe, k=k, m=m, metric=self.metric,
+            quantized=quantized)
+        return SearchResult(ids=out_ids, dists=out_d, steps=nprobe,
+                            expansions=scanned, backend=self.name)
+
+    def memory_bytes(self) -> int:
+        idx = self.index
+        if idx is None:
+            return 0
+        arrays = (idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
+                  idx.vec_start, idx.base_q, idx.scales, idx.base, idx.ids)
+        return (sum(a.size * a.dtype.itemsize for a in arrays)
+                + idx.offsets.nbytes + idx.cell_bounds.nbytes
+                + idx.vec_bounds.nbytes)
+
+    # -- checkpointing: device-local slices as separate leaves -------------
+    def to_state_dict(self) -> dict:
+        """Per-shard arrays are saved *unstacked* — one leaf per shard —
+        so the checkpoint's per-leaf bounds framing carries exactly the
+        slice each serving device loads (same format as every other
+        index checkpoint; see ``repro.ckpt.index_io``)."""
+        idx = self.index
+        assert idx is not None, "build() first"
+        state = {
+            "backend": self.name,
+            "metric": idx.metric,
+            "n_shards": idx.n_shards,
+            "centroids": np.asarray(idx.centroids),
+            "cell_shard": np.asarray(idx.cell_shard),
+            "cell_row": np.asarray(idx.cell_row),
+            "vec_start": np.asarray(idx.vec_start),
+            "base": np.asarray(idx.base),
+            "ids": np.asarray(idx.ids),
+            "offsets": np.asarray(idx.offsets),
+            "cell_bounds": np.asarray(idx.cell_bounds),
+            "vec_bounds": np.asarray(idx.vec_bounds),
+        }
+        for j in range(idx.n_shards):
+            state[f"shard{j}/cells"] = np.asarray(idx.cells[j])
+            state[f"shard{j}/base_q"] = np.asarray(idx.base_q[j])
+            state[f"shard{j}/scales"] = np.asarray(idx.scales[j])
+        return state
+
+    def from_state_dict(self, state: dict) -> None:
+        self.metric = state["metric"]
+        n_shards = int(state["n_shards"])
+        self.index = ShardedIvfIndex(
+            centroids=jnp.asarray(state["centroids"]),
+            cell_shard=jnp.asarray(state["cell_shard"]),
+            cell_row=jnp.asarray(state["cell_row"]),
+            cells=jnp.stack([jnp.asarray(state[f"shard{j}/cells"])
+                             for j in range(n_shards)]),
+            vec_start=jnp.asarray(state["vec_start"]),
+            base_q=jnp.stack([jnp.asarray(state[f"shard{j}/base_q"])
+                              for j in range(n_shards)]),
+            scales=jnp.stack([jnp.asarray(state[f"shard{j}/scales"])
+                              for j in range(n_shards)]),
+            base=jnp.asarray(state["base"]),
+            ids=jnp.asarray(state["ids"]),
+            offsets=np.asarray(state["offsets"]),
+            cell_bounds=np.asarray(state["cell_bounds"]),
+            vec_bounds=np.asarray(state["vec_bounds"]),
+            metric=state["metric"])

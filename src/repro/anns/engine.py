@@ -47,6 +47,10 @@ class VariantConfig:
     nlist: int = 64                  # k-means cells
     nprobe: int = 8                  # cells probed at the default ef=64
     kmeans_iters: int = 8            # coarse-quantizer training iterations
+    max_cell: int = 0                # 0 = off; else balanced-assignment cap
+                                     # (oversized cells split at build)
+    # -- sharded backend: device-mesh scale-out knob ---------------------
+    n_shards: int = 1                # cell-granular shards of the layout
 
     def __post_init__(self):
         # fail fast on unknown families: a typo'd backend name would
@@ -64,7 +68,8 @@ class VariantConfig:
                 f"eps={self.num_entry_points} adEF={self.adaptive_ef_coef} "
                 f"g={self.gather_width} pat={self.patience} "
                 f"q8={int(self.quantized_prefilter)} rr={self.rerank_factor} "
-                f"nlist={self.nlist} npr={self.nprobe} km={self.kmeans_iters}")
+                f"nlist={self.nlist} npr={self.nprobe} km={self.kmeans_iters} "
+                f"mc={self.max_cell} sh={self.n_shards}")
 
 
 # the paper's baseline (GLASS defaults, §3.5): single entry point, fixed ef,
@@ -79,6 +84,12 @@ GLASS_BASELINE = VariantConfig(
 IVF_BASELINE = VariantConfig(
     backend="ivf", nlist=64, nprobe=8, kmeans_iters=8, rerank_factor=2)
 
+# the sharded family's reference point: the same untuned IVF knobs split
+# over two cell shards with the balanced-assignment cap off — the minimal
+# honest multi-shard deployment a candidate must beat.
+SHARDED_BASELINE = dataclasses.replace(IVF_BASELINE, backend="sharded",
+                                       n_shards=2)
+
 # One canonical baseline variant per backend family: the reference point
 # each family's banded-AUC reward is normalised against (see
 # repro.core.reward.FamilyBaselines) so rewards stay comparable when the
@@ -90,6 +101,7 @@ FAMILY_BASELINE_VARIANTS = {
     "quantized_prefilter": dataclasses.replace(
         GLASS_BASELINE, backend="quantized_prefilter", rerank_factor=2),
     "ivf": IVF_BASELINE,
+    "sharded": SHARDED_BASELINE,
 }
 
 

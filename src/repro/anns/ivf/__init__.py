@@ -2,17 +2,23 @@
 
 - :mod:`repro.anns.ivf.kmeans` — mini-batch Lloyd's trainer whose
   assignment step runs through the Pallas distance/top-k kernels, with a
-  pure-numpy reference twin for parity tests.
+  pure-numpy reference twin for parity tests, plus the
+  balanced-assignment constraint (:func:`split_oversized`).
 - :mod:`repro.anns.ivf.layout` — cell-major CSR-style layout
   (:class:`IvfIndex`): contiguous per-cell blocks + offsets + id remap +
   int8 per-cell codes, so probe scans are dense kernel calls.
+- :mod:`repro.anns.ivf.sharding` — whole-cell slicing of that layout
+  across a device mesh (:class:`ShardedIvfIndex`, :func:`shard_ivf`).
 
-The ``"ivf"`` search backend over this state lives in
-:mod:`repro.anns.backends.ivf` (registered in ``repro.anns.registry``).
+The ``"ivf"`` and ``"sharded"`` search backends over this state live in
+:mod:`repro.anns.backends` (registered in ``repro.anns.registry``).
 """
 from repro.anns.ivf.kmeans import (assign, assign_ref, kmeans_fit,
-                                   kmeans_ref, lloyd_step)
+                                   kmeans_ref, lloyd_step, split_oversized)
 from repro.anns.ivf.layout import IvfIndex, build_ivf, ivf_stats
+from repro.anns.ivf.sharding import (ShardedIvfIndex, shard_ivf,
+                                     sharded_stats)
 
 __all__ = ["assign", "assign_ref", "kmeans_fit", "kmeans_ref", "lloyd_step",
-           "IvfIndex", "build_ivf", "ivf_stats"]
+           "split_oversized", "IvfIndex", "build_ivf", "ivf_stats",
+           "ShardedIvfIndex", "shard_ivf", "sharded_stats"]

@@ -143,6 +143,64 @@ def kmeans_fit(x: np.ndarray, nlist: int, *, iters: int = 8,
     return centroids
 
 
+# ---------------------------------------------------------------------------
+# balanced assignment (cap cell size by splitting oversized cells)
+# ---------------------------------------------------------------------------
+
+def _two_means_split(pts: np.ndarray, iters: int = 8) -> np.ndarray:
+    """Deterministic local 2-means over ``pts``: returns a bool mask for
+    the "left" half.  Seeded by the farthest-point pair (no RNG), with a
+    guaranteed non-trivial split: if 2-means collapses one side (all
+    duplicates), fall back to an index-order halving."""
+    ctr = pts.mean(axis=0)
+    p0 = int(np.argmax(((pts - ctr) ** 2).sum(axis=1)))
+    p1 = int(np.argmax(((pts - pts[p0]) ** 2).sum(axis=1)))
+    c0, c1 = pts[p0].copy(), pts[p1].copy()
+    left = np.ones(len(pts), bool)
+    for _ in range(max(1, iters)):
+        d0 = ((pts - c0) ** 2).sum(axis=1)
+        d1 = ((pts - c1) ** 2).sum(axis=1)
+        left = d0 <= d1
+        if left.all() or not left.any():
+            break
+        c0, c1 = pts[left].mean(axis=0), pts[~left].mean(axis=0)
+    if left.all() or not left.any():
+        left = np.arange(len(pts)) < (len(pts) + 1) // 2
+    return left
+
+
+def split_oversized(x: np.ndarray, centroids: np.ndarray, a: np.ndarray,
+                    *, cap: int) -> tuple[np.ndarray, np.ndarray]:
+    """Balanced-assignment constraint: repeatedly split the largest cell
+    until no cell holds more than ``cap`` members.
+
+    Each split replaces the oversized centroid with the two local 2-means
+    sub-centroids and relabels only that cell's members, so every other
+    cell is untouched and ids are conserved.  Deterministic (farthest-point
+    seeding, stable argmax tie-breaks); ``nlist`` grows by one per split.
+
+    This is the mesh-scale prerequisite from the ROADMAP: ``cell_pad`` is
+    the max cell size, so one skewed cell inflates every shard's probe
+    gather — capping it bounds ``ivf_stats()["pad_overhead"]`` for all
+    shards at once.
+    """
+    assert cap >= 1, cap
+    x = np.asarray(x, np.float32)
+    cents = [c for c in np.asarray(centroids, np.float32)]
+    a = np.asarray(a, np.int32).copy()
+    for _ in range(len(x)):                       # hard bound; never hit
+        counts = np.bincount(a, minlength=len(cents))
+        c = int(np.argmax(counts))                # ties -> lowest index
+        if counts[c] <= cap:
+            break
+        members = np.flatnonzero(a == c)
+        left = _two_means_split(x[members])
+        cents[c] = x[members[left]].mean(axis=0)
+        cents.append(x[members[~left]].mean(axis=0))
+        a[members[~left]] = len(cents) - 1
+    return np.stack(cents).astype(np.float32), a
+
+
 def kmeans_ref(x: np.ndarray, nlist: int, *, iters: int = 8,
                batch_size: int = 4096, metric: str = "l2",
                seed: int = 0) -> np.ndarray:

@@ -21,9 +21,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.anns.ivf.kmeans import assign, kmeans_fit
+from repro.anns.ivf.kmeans import assign, kmeans_fit, split_oversized
 from repro.kernels.common import round_up
 from repro.kernels.qdist.ops import quantize_int8
+
+
+def probe_floor(index, k: int) -> int:
+    """Worst-case nprobe floor: the smallest j such that *any* j cells
+    jointly hold >= k vectors (the j smallest cells are the worst case).
+
+    The ONE implementation shared by :class:`IvfIndex` and
+    ``ShardedIvfIndex`` — both keep the same CSR ``offsets``, and the
+    sharded==ivf exactness guarantee depends on both computing the
+    identical floor.  The sorted cumulative cell sizes are immutable
+    after build, so they are cached on the index off the serving hot
+    path."""
+    cum = getattr(index, "_sizes_cum", None)
+    if cum is None:
+        cum = np.cumsum(np.sort(np.diff(index.offsets)))
+        index._sizes_cum = cum
+    return int(np.searchsorted(cum, min(k, index.n)) + 1)
 
 
 @dataclass
@@ -50,15 +67,8 @@ class IvfIndex:
         return int(self.cells.shape[1])
 
     def min_cells_for(self, k: int) -> int:
-        """Smallest j such that *any* j cells jointly hold >= k vectors
-        (the j smallest cells are the worst case).  The sorted cumulative
-        cell sizes are immutable after build, so they are computed once
-        and cached off the serving hot path."""
-        cum = getattr(self, "_sizes_cum", None)
-        if cum is None:
-            cum = np.cumsum(np.sort(np.diff(self.offsets)))
-            self._sizes_cum = cum
-        return int(np.searchsorted(cum, min(k, self.n)) + 1)
+        """Worst-case probe floor — see :func:`probe_floor`."""
+        return probe_floor(self, k)
 
 
 def _padded_cells(offsets: np.ndarray, nlist: int) -> np.ndarray:
@@ -76,14 +86,26 @@ def _padded_cells(offsets: np.ndarray, nlist: int) -> np.ndarray:
 
 def build_ivf(base: np.ndarray, *, nlist: int, kmeans_iters: int = 8,
               metric: str = "l2", seed: int = 0,
-              use_kernel: bool = True) -> IvfIndex:
-    """Train the coarse quantizer, then lay the base out cell-major."""
+              use_kernel: bool = True,
+              max_cell: int | None = None) -> IvfIndex:
+    """Train the coarse quantizer, then lay the base out cell-major.
+
+    ``max_cell`` (optional) enforces the balanced-assignment constraint:
+    cells larger than the cap are recursively split
+    (:func:`repro.anns.ivf.kmeans.split_oversized`), growing ``nlist`` but
+    bounding ``cell_pad`` — the knob that keeps one skewed cell from
+    inflating every shard's probe gather at mesh scale.  Balanced cells
+    trade the "nearest centroid == own cell" property for the bound.
+    """
     base = np.ascontiguousarray(np.asarray(base, np.float32))
     n = len(base)
     nlist = max(1, min(nlist, n))
     centroids = kmeans_fit(base, nlist, iters=kmeans_iters, metric=metric,
                            seed=seed, use_kernel=use_kernel)
     a, _ = assign(base, centroids, metric=metric, use_kernel=use_kernel)
+    if max_cell:
+        centroids, a = split_oversized(base, centroids, a, cap=max_cell)
+        nlist = len(centroids)
 
     order = np.argsort(a, kind="stable").astype(np.int32)   # position -> id
     counts = np.bincount(a, minlength=nlist)
@@ -113,4 +135,7 @@ def ivf_stats(index: IvfIndex) -> dict:
         "empty_cells": int((counts == 0).sum()),
         # padding overhead of the dense probe view vs the CSR blocks
         "pad_overhead": float(index.nlist * index.cell_pad / max(index.n, 1)),
+        # skew: how far the worst cell sits above the mean — the quantity
+        # the balanced-assignment cap (build_ivf max_cell) bounds
+        "cell_skew": float(counts.max(initial=0) / max(counts.mean(), 1e-9)),
     }

@@ -1,0 +1,195 @@
+"""Cell-granular sharding of the cell-major IVF layout.
+
+Whole cells are the shard unit: the cell-major layout already stores each
+cell as one contiguous block, so a shard is literally a *slice* of
+``offsets``/``cells`` plus an id remap — no per-vector shuffling.  Cells
+are partitioned into ``n_shards`` contiguous ranges with near-equal
+vector counts (a prefix walk over the CSR offsets), and each shard's
+block is re-indexed to local positions.
+
+The per-shard arrays are stacked along a leading shard axis so the scan
+stage is one ``vmap`` (single device) or one mesh-partitioned program
+(``place_on_mesh``: the leading axis is sharded over a ``("shard",)``
+mesh, making every device hold and scan only its own slice).  Stacking
+forces a common padded width, which is exactly why the
+balanced-assignment cap (``build_ivf(max_cell=...)``) exists: ``cell_pad``
+is the max cell size, so one skewed cell would inflate every shard's
+gather.
+
+The coarse quantizer (centroids) and the fp32 rerank store stay
+replicated — coarse routing is tiny, and the rerank is the merge stage
+that runs where the shortlists meet.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.ivf.layout import IvfIndex, probe_floor
+from repro.kernels.common import round_up
+
+
+def balanced_cell_ranges(counts: np.ndarray, n_shards: int) -> np.ndarray:
+    """(S+1,) contiguous cell boundaries with near-equal vector counts.
+
+    A prefix walk: shard j ends at the first cell where the cumulative
+    count reaches ``(j+1)/S`` of the total.  Shards may own zero cells
+    when ``n_shards`` exceeds the cell count.
+    """
+    counts = np.asarray(counts)
+    cum = np.concatenate([[0], np.cumsum(counts)])
+    n, C = int(cum[-1]), len(counts)
+    bounds = [0]
+    for j in range(1, n_shards):
+        c = int(np.searchsorted(cum, j * n / n_shards, side="left"))
+        bounds.append(max(bounds[-1], min(c, C)))
+    bounds.append(C)
+    return np.asarray(bounds, np.int64)
+
+
+@dataclass
+class ShardedIvfIndex:
+    """Stacked per-shard view of an :class:`IvfIndex` (leading shard axis).
+
+    ``cells`` rows hold *local* positions into the shard's own
+    ``base_q``/``scales`` slice; ``vec_start[j]`` maps them back to global
+    cell-major positions, which index the replicated ``base`` (fp32
+    rerank store) and ``ids`` (position -> original id).
+    """
+    centroids: jax.Array       # (C, d) f32, replicated coarse quantizer
+    cell_shard: jax.Array      # (C,) int32 cell -> owning shard (routing)
+    cell_row: jax.Array        # (C,) int32 cell -> local row in owner table
+    cells: jax.Array           # (S, Cmax, pad) int32 local positions, -1 pad
+    vec_start: jax.Array       # (S,) int32 global position of shard block
+    base_q: jax.Array          # (S, Npad, d) int8 device-local codes
+    scales: jax.Array          # (S, Npad) f32 device-local dequant scales
+    base: jax.Array            # (N, d) f32 global cell-major (rerank store)
+    ids: jax.Array             # (N,) int32 global position -> original id
+    offsets: np.ndarray        # (C+1,) global CSR boundaries (host)
+    cell_bounds: np.ndarray    # (S+1,) cells per shard (host)
+    vec_bounds: np.ndarray     # (S+1,) vectors per shard (host)
+    metric: str
+
+    @property
+    def n(self) -> int:
+        return int(self.base.shape[0])
+
+    @property
+    def nlist(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.cells.shape[0])
+
+    @property
+    def cell_pad(self) -> int:
+        return int(self.cells.shape[2])
+
+    def min_cells_for(self, k: int) -> int:
+        """Worst-case probe floor — the shared :func:`probe_floor` over
+        the same global offsets as the unsharded index, so the
+        ef->nprobe mapping stays equivalent by construction."""
+        return probe_floor(self, k)
+
+
+def shard_ivf(index: IvfIndex, n_shards: int) -> ShardedIvfIndex:
+    """Slice a built :class:`IvfIndex` into ``n_shards`` cell ranges.
+
+    Pure re-layout: codes, scales, and the rerank store are byte-identical
+    slices of the unsharded arrays, so scan distances — and therefore
+    merged results — match the unsharded backend exactly.
+    """
+    assert n_shards >= 1, n_shards
+    counts = np.diff(index.offsets)
+    C = index.nlist
+    cb = balanced_cell_ranges(counts, n_shards)
+    vb = np.asarray(index.offsets)[cb]
+
+    pad = index.cell_pad
+    cmax = max(1, int(np.max(np.diff(cb), initial=1)))
+    npad = round_up(max(1, int(np.max(np.diff(vb), initial=1))), 8)
+    d = index.base.shape[1]
+
+    g_cells = np.asarray(index.cells)
+    g_base_q = np.asarray(index.base_q)
+    g_scales = np.asarray(index.scales)
+
+    cell_shard = np.zeros(C, np.int32)
+    cell_row = np.zeros(C, np.int32)
+    cells = np.full((n_shards, cmax, pad), -1, np.int32)
+    base_q = np.zeros((n_shards, npad, d), g_base_q.dtype)
+    scales = np.zeros((n_shards, npad), np.float32)
+    for j in range(n_shards):
+        c0, c1 = int(cb[j]), int(cb[j + 1])
+        v0, v1 = int(vb[j]), int(vb[j + 1])
+        cell_shard[c0:c1] = j
+        cell_row[c0:c1] = np.arange(c1 - c0, dtype=np.int32)
+        g = g_cells[c0:c1]
+        cells[j, : c1 - c0] = np.where(g >= 0, g - v0, -1)
+        base_q[j, : v1 - v0] = g_base_q[v0:v1]
+        scales[j, : v1 - v0] = g_scales[v0:v1]
+
+    return ShardedIvfIndex(
+        centroids=index.centroids,
+        cell_shard=jnp.asarray(cell_shard),
+        cell_row=jnp.asarray(cell_row),
+        cells=jnp.asarray(cells),
+        vec_start=jnp.asarray(vb[:-1].astype(np.int32)),
+        base_q=jnp.asarray(base_q),
+        scales=jnp.asarray(scales),
+        base=index.base,
+        ids=index.ids,
+        offsets=np.asarray(index.offsets),
+        cell_bounds=cb,
+        vec_bounds=vb.astype(np.int64),
+        metric=index.metric)
+
+
+def place_on_mesh(index: ShardedIvfIndex, mesh) -> ShardedIvfIndex:
+    """Device-place the stacked arrays: per-shard leaves split over the
+    mesh's ``"shard"`` axis, routing/merge state replicated.  Under jit
+    the vmapped scan then partitions across devices with no resharding —
+    only the shortlist concat (the merge) moves data."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    import dataclasses
+    return dataclasses.replace(
+        index,
+        cells=put(index.cells, P("shard", None, None)),
+        vec_start=put(index.vec_start, P("shard")),
+        base_q=put(index.base_q, P("shard", None, None)),
+        scales=put(index.scales, P("shard", None)),
+        centroids=put(index.centroids, P()),
+        cell_shard=put(index.cell_shard, P()),
+        cell_row=put(index.cell_row, P()),
+        base=put(index.base, P()),
+        ids=put(index.ids, P()))
+
+
+def sharded_stats(index: ShardedIvfIndex) -> dict:
+    """Telemetry for the shard layout: per-shard load, skew, and the
+    stacked-padding overhead (the mesh-scale analogue of
+    ``ivf_stats()["pad_overhead"]``)."""
+    sizes = np.diff(index.vec_bounds)
+    npad = int(index.base_q.shape[1])
+    return {
+        "n": index.n,
+        "nlist": index.nlist,
+        "n_shards": index.n_shards,
+        "shard_sizes": sizes.astype(int).tolist(),
+        "shard_cells": np.diff(index.cell_bounds).astype(int).tolist(),
+        # skew: worst shard load over the ideal even split — the metric
+        # the balanced cell ranges (and the max_cell cap upstream) target
+        "shard_skew": float(sizes.max(initial=0)
+                            / max(index.n / max(index.n_shards, 1), 1e-9)),
+        "cell_pad": index.cell_pad,
+        # stacked per-shard padding overhead vs the raw CSR blocks
+        "pad_overhead": float(index.n_shards * npad / max(index.n, 1)),
+    }

@@ -20,6 +20,10 @@ Built-ins:
 - ``"ivf"``                 — k-means cells (Pallas-assigned coarse
                               quantizer) + dense per-cell int8 scans +
                               fp32 rerank, cell-major layout.
+- ``"sharded"``             — the ivf layout sliced whole-cell across a
+                              device mesh: coarse top-nprobe doubles as
+                              shard routing, per-shard int8 scans, fp32
+                              rerank over the merged shortlists.
 
 Adding a backend::
 
@@ -55,6 +59,7 @@ _BUILTIN_MODULES: Dict[str, str] = {
     "brute_force": "repro.anns.backends.brute_force",
     "quantized_prefilter": "repro.anns.backends.quantized",
     "ivf": "repro.anns.backends.ivf",
+    "sharded": "repro.anns.backends.sharded",
 }
 
 

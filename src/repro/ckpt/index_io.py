@@ -28,13 +28,23 @@ INDEX_META_KEY = "anns_index_meta"
 
 def save_index(path: str, backend, *, step: int = 0,
                extra: dict | None = None) -> None:
-    """Checkpoint a built backend's ``to_state_dict()`` snapshot."""
+    """Checkpoint a built backend's ``to_state_dict()`` snapshot.
+
+    The backend's ``variant`` (search-time knob defaults: rerank factor,
+    nprobe, shard count, ...) rides in the manifest too, so a serving
+    host restoring the index reproduces the *same operating point* as
+    the build host — not just the same state.
+    """
     state = backend.to_state_dict()
     arrays = {k: np.asarray(v) for k, v in state.items()
               if isinstance(v, np.ndarray)}
     meta = {k: v for k, v in state.items() if not isinstance(v, np.ndarray)}
     if "backend" not in meta:
         meta["backend"] = backend.name
+    variant = getattr(backend, "variant", None)
+    if variant is not None and "variant" not in meta:
+        import dataclasses
+        meta["variant"] = dataclasses.asdict(variant)
     save_checkpoint(path, arrays, step,
                     extra={INDEX_META_KEY: meta, **(extra or {})})
 
@@ -43,8 +53,10 @@ def load_index(path: str, variant=None, *, seed: int = 0):
     """Restore a backend instance from :func:`save_index` output.
 
     The backend class is resolved by registry name from the checkpoint
-    itself; ``variant`` (optional) supplies search-time knob defaults —
-    build-time state comes entirely from the snapshot.
+    itself; ``variant`` (optional) overrides search-time knob defaults —
+    when omitted, the variant saved alongside the index is restored, so
+    the serving host lands on the build host's operating point.
+    Build-time state always comes entirely from the snapshot.
     """
     from repro.anns import registry
 
@@ -54,6 +66,11 @@ def load_index(path: str, variant=None, *, seed: int = 0):
         raise KeyError(
             f"{path!r} is not an index checkpoint (missing "
             f"{INDEX_META_KEY!r} in manifest extra)")
+    meta = dict(meta)
+    saved_variant = meta.pop("variant", None)
+    if variant is None and saved_variant is not None:
+        from repro.anns.engine import VariantConfig
+        variant = VariantConfig(**saved_variant)
     backend = registry.create(meta["backend"], variant,
                               metric=meta.get("metric", "l2"), seed=seed)
     backend.from_state_dict({**arrays, **meta})

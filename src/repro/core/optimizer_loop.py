@@ -100,7 +100,11 @@ class CrinnOptimizer:
         # otherwise sweeping an inert knob (say nlist under a graph
         # backend) would force spurious rebuilds of identical state.
         if v.backend == "ivf":
-            return (v.backend, v.nlist, v.kmeans_iters)
+            return (v.backend, v.nlist, v.kmeans_iters, v.max_cell)
+        if v.backend == "sharded":
+            # n_shards re-slices the built layout, so it is build identity
+            return (v.backend, v.nlist, v.kmeans_iters, v.max_cell,
+                    v.n_shards)
         if v.backend == "brute_force":
             return (v.backend,)
         return (v.backend, v.degree, v.ef_construction, v.nn_descent_rounds,

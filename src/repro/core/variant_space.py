@@ -26,7 +26,8 @@ from repro.anns.engine import VariantConfig
 # family itself, with per-family reward baselines
 # (repro.core.reward.FamilyBaselines) keeping banded-AUC comparable
 # across families.
-BACKEND_CHOICES = ("graph", "brute_force", "quantized_prefilter", "ivf")
+BACKEND_CHOICES = ("graph", "brute_force", "quantized_prefilter", "ivf",
+                   "sharded")
 
 # module name -> ordered list of (knob, choices)
 MODULES: dict[str, list[tuple[str, tuple]]] = {
@@ -57,6 +58,9 @@ MODULES: dict[str, list[tuple[str, tuple]]] = {
         ("nprobe", (1, 2, 4, 8, 16, 32)),
         ("kmeans_iters", (2, 4, 8, 16)),
         ("rerank_factor", (1, 2, 4, 8)),
+        # sharded-family scale-out knob (inert for backend != "sharded");
+        # the policy trades merge overhead against per-shard scan width
+        ("n_shards", (1, 2, 4, 8)),
     ],
     "refinement": [
         ("quantized_prefilter", (False, True)),

@@ -1,0 +1,9 @@
+"""Distributed-execution utilities: sharding rules, HLO collective
+analysis, and the seq-sharded flash-decode combine.
+
+Submodules import lazily where possible; ``repro.dist.hlo`` is pure text
+parsing (no jax), ``repro.dist.sharding`` touches only
+``jax.sharding`` types (no device init), and ``repro.dist.seq_decode``
+holds the shard_map decode path dispatched from
+``repro.models.attention``.
+"""

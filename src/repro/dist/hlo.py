@@ -1,0 +1,87 @@
+"""HLO text analysis: count collective ops and the bytes they move.
+
+The dry-run compiles every (arch x shape) cell and wants a cheap,
+dependency-free answer to "how much does this program talk?".  XLA's
+``compiled.as_text()`` HLO is stable enough to scan line-wise: every
+collective instruction is written as
+
+    %name = <output shape> <op>(<operands>), attrs...
+
+so the op's traffic is read off its *output* shape (all-gather output is
+the gathered size, reduce-scatter output the scattered slice — both are
+the per-device wire view we care about).  Async pairs appear as
+``<op>-start`` / ``<op>-done``; only the ``-start`` carries the transfer,
+the ``-done`` is a token and is skipped.
+"""
+from __future__ import annotations
+
+import re
+
+# bytes per element for the HLO primitive types we ever see
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# collectives we attribute traffic to (after folding -start/-done forms)
+_COLLECTIVES = (
+    "reduce-scatter",
+    "all-reduce",
+    "all-gather",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape: str) -> int:
+    """Bytes of one HLO shape string, e.g. ``"f32[16,512]{1,0}"``.
+    Tuple shapes (``"(f32[4,4]{1,0}, s32[2])"``) sum their components;
+    layout annotations (``{1,0}``) are ignored."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# "%x = <shape-or-tuple> <op-name>(" — shape is everything between '=' and
+# the op token; op token is the last bare word before '('.
+_INSTR_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>[a-z][a-z0-9-]*)\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Scan HLO text for collective instructions.
+
+    Returns ``{op: {"count": int, "bytes": int}, ..., "total_bytes": int}``
+    with async ``-start`` forms folded into their base op and ``-done``
+    forms skipped (they carry no new transfer).
+    """
+    out: dict = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group("op")
+        if op.endswith("-done"):
+            continue
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        entry = out.setdefault(op, {"count": 0, "bytes": 0})
+        entry["count"] += 1
+        entry["bytes"] += _shape_bytes(m.group("shape"))
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out

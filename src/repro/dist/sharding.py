@@ -1,0 +1,142 @@
+"""Sharding rules: map parameter / cache / batch pytrees onto a mesh.
+
+One generic, shape-driven policy instead of per-arch tables: with ten
+assigned architectures (dense, MoE, SSM, RWKV, audio/vlm frontends) a
+name-keyed rule set would be forever incomplete, while "shard the widest
+divisible dim over the model axis" is total — every leaf gets a legal
+(possibly replicated) sharding, and GSPMD propagates the rest.  Numerics
+never depend on the choice; only memory/traffic do, which the dry-run's
+collective analysis measures per cell.
+
+Axis conventions (see ``repro.launch.mesh``): tensor-parallel collectives
+run over ``"model"``; data parallelism spans whichever of
+``("pod", "data", "replica")`` the mesh defines; ZeRO/FSDP states shard
+over those same DP axes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DP_AXES = ("pod", "data", "replica")
+TP_AXIS = "model"
+
+
+def _dp_axes(mesh) -> tuple:
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def _axes_size(mesh, axes) -> int:
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def _dp_entry(dp: tuple):
+    """PartitionSpec entry for the DP axes (tuple entry only when >1)."""
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _shape_of(leaf):
+    return tuple(getattr(leaf, "shape", ()))
+
+
+def scalar_sharding(mesh) -> NamedSharding:
+    """Fully replicated (scalars, lengths, step counters)."""
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh, ndim: int = 2, batch: int | None = None
+                   ) -> NamedSharding:
+    """Leading-axis data parallelism; replicated when ``batch`` is given
+    and does not divide the DP extent (tiny long-context batches)."""
+    dp = _dp_axes(mesh)
+    if not dp or (batch is not None and batch % _axes_size(mesh, dp) != 0):
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return NamedSharding(mesh, P(_dp_entry(dp), *([None] * (ndim - 1))))
+
+
+def param_shardings(tree, mesh, *, fsdp: bool = False):
+    """Tensor-parallel parameter shardings for an eval_shape params tree.
+
+    Per leaf: shard ONE dim over the model axis — the *widest* dim that
+    divides (ties prefer the later dim); replicate when nothing divides.
+    Widest-first keeps the per-device slice as small as possible and
+    steers away from tiny trailing dims (head_dim is both the worst
+    layout choice and, with RoPE's rotate-half crossing the slice, the
+    one XLA:CPU's partitioner has been observed to miscompute under
+    forced host devices).  ``fsdp=True`` additionally shards one
+    remaining dim over the DP axes (FSDP/ZeRO-3 parameter slicing).
+    """
+    tp = TP_AXIS if TP_AXIS in mesh.axis_names else None
+    tp_size = mesh.shape[tp] if tp else 1
+    dp = _dp_axes(mesh)
+    dp_size = _axes_size(mesh, dp) if dp else 1
+
+    def one(leaf):
+        shape = _shape_of(leaf)
+        spec = [None] * len(shape)
+        if tp and tp_size > 1:
+            order = sorted(range(len(shape)), key=lambda i: (-shape[i], -i))
+            for d in order:
+                if shape[d] >= tp_size and shape[d] % tp_size == 0:
+                    spec[d] = tp
+                    break
+        if fsdp and dp and dp_size > 1:
+            for d in range(len(shape)):
+                if (spec[d] is None and shape[d] >= dp_size
+                        and shape[d] % dp_size == 0):
+                    spec[d] = _dp_entry(dp)
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, tree)
+
+
+def zero_shardings(pshard, pshape, mesh):
+    """ZeRO-1/2 optimizer-state shardings: start from the parameter's
+    spec and additionally slice one still-replicated dim over the DP
+    axes, so each data-parallel rank owns a distinct shard of m/v/master
+    state.  Leaves with no divisible dim keep the parameter sharding."""
+    dp = _dp_axes(mesh)
+    dp_size = _axes_size(mesh, dp) if dp else 1
+
+    def one(sh, leaf):
+        shape = _shape_of(leaf)
+        if not dp or dp_size == 1:
+            return sh
+        spec = list(sh.spec) + [None] * (len(shape) - len(sh.spec))
+        for d in range(len(shape)):
+            if (spec[d] is None and shape[d] >= dp_size
+                    and shape[d] % dp_size == 0):
+                spec[d] = _dp_entry(dp)
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, pshard, pshape)
+
+
+def cache_shardings(cache_tree, mesh):
+    """Decode-state shardings.
+
+    KV caches are (B, S, Hk, D): shard the *sequence* axis over the model
+    axis — the long-context layout ``repro.dist.seq_decode`` combines
+    over (each device owns a contiguous slice of positions).  Falls back
+    to the heads axis when the sequence length does not divide, then to
+    replication.  Non-4D leaves (SSM/RWKV recurrent state) replicate:
+    they are small and updated every step.
+    """
+    tp = TP_AXIS if TP_AXIS in mesh.axis_names else None
+    tp_size = mesh.shape[tp] if tp else 1
+
+    def one(leaf):
+        shape = _shape_of(leaf)
+        if tp and tp_size > 1 and len(shape) == 4:
+            if shape[1] >= tp_size and shape[1] % tp_size == 0:
+                return NamedSharding(mesh, P(None, tp, None, None))
+            if shape[2] >= tp_size and shape[2] % tp_size == 0:
+                return NamedSharding(mesh, P(None, None, tp, None))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree.map(one, cache_tree)

@@ -24,6 +24,14 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_shard_mesh(n_shards: int):
+    """1-D ``("shard",)`` mesh for the sharded ANNS backend: each device
+    owns one slice of the stacked cell-major layout
+    (``repro.anns.ivf.sharding.place_on_mesh``).  CPU tests force host
+    devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    return jax.make_mesh((n_shards,), ("shard",))
+
+
 def make_tuned_mesh(tp: int = 16, *, multi_pod: bool = False):
     """Same physical 256/512-chip grid, with the 16-wide model dimension
     logically split into ("replica", "model") = (16//tp, tp).

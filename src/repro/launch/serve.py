@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--backend", default="graph",
                     help="ANNS backend name (see repro.anns.registry)")
+    ap.add_argument("--n-shards", type=int, default=None,
+                    help="cell-granular shard count (sharded backend); "
+                         "with enough devices the shards are mesh-placed")
     ap.add_argument("--optimized", action="store_true",
                     help="serve the CRINN-optimized variant instead of GLASS")
     ap.add_argument("--save-index", metavar="DIR", default=None,
@@ -57,12 +60,19 @@ def main():
                                 gather_width=2, patience=4,
                                 adaptive_ef_coef=14.5)
     variant = dataclasses.replace(variant, backend=args.backend)
+    if args.n_shards:
+        variant = dataclasses.replace(variant, n_shards=args.n_shards)
     if args.load_index:
         t0 = time.time()
         target = ckpt.load_index(args.load_index)   # bare AnnsIndex backend
         print(f"restored {target.name!r} index from {args.load_index} "
               f"in {time.time()-t0:.1f}s "
               f"({target.memory_bytes()/1e6:.1f} MB resident, no rebuild)")
+        if args.n_shards and getattr(target.index, "n_shards",
+                                     args.n_shards) != args.n_shards:
+            print(f"note: --n-shards {args.n_shards} ignored — the shard "
+                  f"count is build identity; checkpoint carries "
+                  f"n_shards={target.index.n_shards}")
     else:
         print(f"building index ({variant.describe()}) ...")
         t0 = time.time()
@@ -73,6 +83,16 @@ def main():
         if args.save_index:
             ckpt.save_index(args.save_index, target)
             print(f"index state checkpointed to {args.save_index}")
+
+    if getattr(target, "name", "") == "sharded":
+        import jax
+        from repro.launch.mesh import make_shard_mesh
+        ns = target.index.n_shards
+        if ns > 1 and jax.device_count() >= ns:
+            # each device holds only its cell shard; run with
+            # XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU
+            target.place_on_mesh(make_shard_mesh(ns))
+            print(f"placed {ns} cell shards on {ns} devices")
 
     server = AnnsServer(target, max_batch=args.max_batch,
                         params=SearchParams(k=args.k, ef=args.ef))

@@ -1,0 +1,356 @@
+"""Sharded multi-device ANNS backend tests.
+
+Three layers of guarantees, all property-based where randomness helps:
+
+- **equivalence** — ``sharded(n_shards=1)`` is bit-identical to ``ivf``
+  on random datasets, and any shard count returns the same merged ids at
+  max nprobe (the shard slices are byte-identical views, so scan
+  distances agree exactly).
+- **ragged-shortlist safety** — ``fp32_rerank`` never returns a pad slot
+  when handed ragged per-shard shortlists with a validity mask.
+- **edge cases** — ``snap_to_ladder`` off-ladder inputs,
+  ``min_cells_for`` beyond the largest cell, and the k-means
+  balanced-split invariants (cap respected, ids conserved,
+  deterministic).
+
+The >=10k-vector anchor test pins the acceptance criterion; the
+subprocess test runs the same search with the shard axis *placed* on a
+real (forced-host) device mesh.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from proptest import given, integers, sampled_from
+from repro.anns import SearchParams, make_dataset, registry
+from repro.anns.api import (EF_LADDER, STEP_LADDER, AnnsIndex,
+                            snap_to_ladder)
+from repro.anns.backends.ivf import NPROBE_LADDER
+from repro.anns.datasets import recall_at_k
+from repro.anns.engine import IVF_BASELINE, SHARDED_BASELINE
+from repro.anns.ivf import build_ivf, ivf_stats
+from repro.anns.ivf.kmeans import split_oversized
+from repro.anns.ivf.sharding import balanced_cell_ranges, shard_ivf
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _blobs(seed: int, n: int, d: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((8, d)).astype(np.float32) * 2.5
+    return (centers[rng.integers(0, 8, size=n)]
+            + rng.standard_normal((n, d)).astype(np.float32))
+
+
+def _ivf_and_sharded(x, *, nlist: int, n_shards: int, seed: int = 0):
+    v = dataclasses.replace(IVF_BASELINE, nlist=nlist, kmeans_iters=2)
+    ivf = registry.create("ivf", v, seed=seed)
+    ivf.build(x)
+    vs = dataclasses.replace(v, backend="sharded", n_shards=n_shards)
+    sh = registry.create("sharded", vs, seed=seed)
+    sh.build(x)
+    return ivf, sh
+
+
+# ---------------------------------------------------------------------------
+# property: equivalence with the unsharded ivf backend
+# ---------------------------------------------------------------------------
+
+@given(n_examples=6, seed=11,
+       data_seed=integers(0, 10_000),
+       n=sampled_from((256, 512, 900)),
+       d=sampled_from((16, 32)),
+       nlist=sampled_from((8, 24)),
+       ef=sampled_from((16, 64, 256)))
+def test_one_shard_is_bit_identical_to_ivf(data_seed, n, d, nlist, ef):
+    """sharded(n_shards=1) must reproduce ivf exactly — ids AND dists —
+    at every operating point, not only at max nprobe: with one shard the
+    merge is a no-op and both backends run the same candidate order."""
+    x = _blobs(data_seed, n, d)
+    ivf, sh = _ivf_and_sharded(x, nlist=nlist, n_shards=1, seed=data_seed % 7)
+    p = SearchParams(k=10, ef=ef)
+    a, b = ivf.search(x[:8], p), sh.search(x[:8], p)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    assert int(a.expansions) == int(b.expansions)
+
+
+@given(n_examples=6, seed=12,
+       data_seed=integers(0, 10_000),
+       n=sampled_from((256, 640)),
+       nlist=sampled_from((8, 16)),
+       n_shards=sampled_from((2, 4)))
+def test_merged_ids_match_ivf_at_max_nprobe(data_seed, n, nlist, n_shards):
+    """At max nprobe every cell is probed on its owning shard; the merged
+    per-shard shortlists must reproduce the unsharded answer exactly."""
+    x = _blobs(data_seed, n, 24)
+    ivf, sh = _ivf_and_sharded(x, nlist=nlist, n_shards=n_shards)
+    ef_max = 64 * ivf.index.nlist
+    p = SearchParams(k=10, ef=ef_max, rerank_factor=4)
+    a, b = ivf.search(x[:8], p), sh.search(x[:8], p)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(np.asarray(a.dists), np.asarray(b.dists),
+                               rtol=0, atol=0)
+
+
+@given(n_examples=8, seed=13,
+       data_seed=integers(0, 10_000),
+       n_shards=sampled_from((2, 4)),
+       rerank_factor=sampled_from((4, 8)))
+def test_rerank_never_returns_pad_slot_on_ragged_shortlists(
+        data_seed, n_shards, rerank_factor):
+    """Tiny cells + a wide rerank make every per-shard shortlist ragged
+    (more slots than real candidates).  The validity mask must survive
+    the merge: k distinct real ids, never a clamped pad duplicate."""
+    x = _blobs(data_seed, 64, 16)
+    v = dataclasses.replace(IVF_BASELINE, backend="sharded", nlist=64,
+                            nprobe=1, kmeans_iters=2,
+                            rerank_factor=rerank_factor, n_shards=n_shards)
+    sh = registry.create("sharded", v)
+    sh.build(x)                         # nlist == n -> singleton cells
+    res = sh.search(x[:8], SearchParams(k=10, ef=4))
+    for row in np.asarray(res.ids):
+        assert len(set(row.tolist())) == 10, row
+
+
+def test_fp32_rerank_honors_validity_mask_directly():
+    """Unit-level: invalid slots keep BIG distance, so a row whose valid
+    candidates are exactly k must return precisely those candidates."""
+    import jax.numpy as jnp
+    from repro.anns.backends.quantized import fp32_rerank
+
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((32, 8)).astype(np.float32)
+    q = rng.standard_normal((4, 8)).astype(np.float32)
+    cand = rng.integers(0, 32, size=(4, 12)).astype(np.int32)
+    valid = np.zeros((4, 12), bool)
+    valid[:, :5] = True                  # 5 real candidates, 7 pad slots
+    ids, dists = fp32_rerank(jnp.asarray(base), jnp.asarray(q),
+                             jnp.asarray(cand), k=5, metric="l2",
+                             valid=jnp.asarray(valid))
+    ids = np.asarray(ids)
+    for r in range(4):
+        assert set(ids[r].tolist()) == set(cand[r, :5].tolist())
+    assert (np.diff(np.asarray(dists), axis=1) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# ladder / floor edge cases
+# ---------------------------------------------------------------------------
+
+@given(n_examples=40, seed=14, value=integers(1, 3000))
+def test_snap_to_ladder_off_ladder_inputs(value):
+    for ladder, step in ((EF_LADDER, 128), (STEP_LADDER, 256),
+                         (NPROBE_LADDER, 128)):
+        r = snap_to_ladder(value, ladder, step)
+        assert r >= value
+        if value <= ladder[-1]:
+            assert r in ladder
+            # tightness: no smaller rung admits the value
+            smaller = [x for x in ladder if x < r]
+            assert all(x < value for x in smaller)
+        else:
+            assert r % step == 0 and r - value < step
+
+
+def test_snap_to_ladder_is_identity_on_rungs():
+    for ladder, step in ((EF_LADDER, 128), (STEP_LADDER, 256),
+                         (NPROBE_LADDER, 128)):
+        for rung in ladder:
+            assert snap_to_ladder(rung, ladder, step) == rung
+
+
+def test_min_cells_for_k_exceeding_largest_cell():
+    """k above the largest cell size must demand >1 cell, the worst-case
+    (smallest-cells-first) bound must actually cover k, and k >= n must
+    clamp to a probe of all non-trivial cells."""
+    x = _blobs(0, 400, 16)
+    idx = build_ivf(x, nlist=16, kmeans_iters=2)
+    sizes = np.sort(np.diff(idx.offsets))
+    k = int(sizes.max()) + 1             # no single cell can hold k
+    j = idx.min_cells_for(k)
+    assert j >= 2
+    assert sizes[:j].sum() >= k          # the j smallest cells cover k
+    assert j == 1 or sizes[: j - 1].sum() < k    # and j is minimal
+    # k clamped to n: probing every cell is always enough
+    assert idx.min_cells_for(10 * len(x)) <= idx.nlist
+    # degenerate: singleton cells need exactly k cells
+    xs = _blobs(1, 48, 8)
+    idx1 = build_ivf(xs, nlist=48, kmeans_iters=1)
+    if int(np.diff(idx1.offsets).max()) == 1:
+        assert idx1.min_cells_for(10) == 10
+
+
+@given(n_examples=8, seed=15,
+       data_seed=integers(0, 10_000),
+       n=sampled_from((200, 500)),
+       cap=sampled_from((16, 40, 64)))
+def test_balanced_split_invariants(data_seed, n, cap):
+    """split_oversized: no cell above the cap, membership is a
+    relabeling (ids conserved), deterministic under a fixed PRNG."""
+    from repro.anns.ivf.kmeans import assign_ref, kmeans_ref
+
+    x = _blobs(data_seed, n, 16)
+    cent = kmeans_ref(x, 8, iters=2, seed=data_seed % 5)
+    a, _ = assign_ref(x, cent)
+    c2, a2 = split_oversized(x, cent, a, cap=cap)
+    counts = np.bincount(a2, minlength=len(c2))
+    assert counts.max() <= cap
+    assert len(a2) == n                       # every id still assigned
+    assert a2.min() >= 0 and a2.max() < len(c2)
+    # untouched cells keep their membership (only oversized cells split)
+    kept = np.bincount(a, minlength=len(cent)) <= cap
+    for c in np.flatnonzero(kept):
+        assert (a2[a == c] == c).all()
+    c3, a3 = split_oversized(x, cent, a, cap=cap)
+    np.testing.assert_array_equal(c2, c3)
+    np.testing.assert_array_equal(a2, a3)
+
+
+def test_build_ivf_max_cell_bounds_pad_and_skew():
+    x = _blobs(2, 600, 24)
+    loose = build_ivf(x, nlist=8, kmeans_iters=2)
+    cap = max(20, int(np.diff(loose.offsets).max()) // 2)
+    tight = build_ivf(x, nlist=8, kmeans_iters=2, max_cell=cap)
+    st_l, st_t = ivf_stats(loose), ivf_stats(tight)
+    assert st_t["max_cell"] <= cap < st_l["max_cell"]
+    assert st_t["cell_pad"] <= loose.cell_pad
+    assert st_t["cell_skew"] <= st_l["cell_skew"] + 1e-9
+    assert sorted(np.asarray(tight.ids).tolist()) == list(range(len(x)))
+
+
+def test_balanced_cell_ranges_cover_and_balance():
+    counts = np.array([5, 1, 40, 3, 3, 8, 2, 30])
+    for s in (1, 2, 4, 8, 16):
+        cb = balanced_cell_ranges(counts, s)
+        assert cb[0] == 0 and cb[-1] == len(counts)
+        assert (np.diff(cb) >= 0).all()
+        assert len(cb) == s + 1
+
+
+# ---------------------------------------------------------------------------
+# >=10k anchor (acceptance criterion) + serving/ckpt integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def big_ds():
+    return make_dataset("sift-128-euclidean", n_base=10_000, n_query=32)
+
+
+@pytest.fixture(scope="module")
+def big_ivf(big_ds):
+    b = registry.create(
+        "ivf", dataclasses.replace(IVF_BASELINE, nlist=64, kmeans_iters=6),
+        metric=big_ds.metric)
+    b.build(big_ds.base)
+    return b
+
+
+def _sharded_view(big_ivf, n_shards):
+    """Sharded backend over the *same* built layout (shard_ivf is the
+    build path minus the k-means rerun — byte-identical slices)."""
+    v = dataclasses.replace(big_ivf.variant, backend="sharded",
+                            n_shards=n_shards)
+    b = registry.create("sharded", v, metric=big_ivf.metric)
+    b.index = shard_ivf(big_ivf.index, n_shards)
+    return b
+
+
+@pytest.mark.parametrize("n_shards", (1, 2, 4))
+def test_10k_anchor_matches_ivf_at_max_nprobe(big_ds, big_ivf, n_shards):
+    """Acceptance: on >=10k vectors the merged sharded results at max
+    nprobe equal the unsharded ivf backend exactly for n_shards 1/2/4."""
+    sh = _sharded_view(big_ivf, n_shards)
+    assert isinstance(sh, AnnsIndex)
+    ef_max = 64 * big_ivf.index.nlist
+    p = SearchParams(k=10, ef=ef_max, rerank_factor=4)
+    a = big_ivf.search(big_ds.queries, p)
+    b = sh.search(big_ds.queries, p)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(np.asarray(a.dists), np.asarray(b.dists),
+                               rtol=0, atol=0)
+    # and the shared anchor sanity: ~exact against ground truth
+    rec = recall_at_k(np.asarray(b.ids), big_ds.gt, 10)
+    assert rec >= 0.99, rec
+
+
+def test_sharded_state_dict_ckpt_roundtrip(big_ds, big_ivf, tmp_path):
+    from repro import ckpt
+    sh = _sharded_view(big_ivf, 2)
+    path = str(tmp_path / "sharded_index.ckpt")
+    ckpt.save_index(path, sh)
+    clone = ckpt.load_index(path, variant=sh.variant)
+    assert clone.name == "sharded"
+    p = SearchParams(k=10, ef=64)
+    a, b = sh.search(big_ds.queries, p), clone.search(big_ds.queries, p)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert clone.memory_bytes() == sh.memory_bytes()
+    assert clone.index.n_shards == 2
+
+
+def test_sharded_served_through_anns_server(big_ds, big_ivf):
+    from repro.runtime.server import AnnsServer
+    sh = _sharded_view(big_ivf, 2)
+    srv = AnnsServer(sh, max_batch=8, params=SearchParams(k=10, ef=128))
+    for i in range(5):
+        srv.submit(big_ds.queries[i], k=5 if i % 2 else 10)
+    out = srv.run()
+    assert [len(r.ids) for r in out] == [10, 5, 10, 5, 10]
+    direct = sh.search(big_ds.queries[:1], SearchParams(k=10, ef=128))
+    np.testing.assert_array_equal(out[0].ids, np.asarray(direct.ids)[0])
+
+
+def test_sharded_stats_and_family_wiring():
+    from repro.anns.engine import FAMILY_BASELINE_VARIANTS, family_baseline
+    from repro.core.variant_space import BACKEND_CHOICES
+
+    assert "sharded" in BACKEND_CHOICES
+    assert FAMILY_BASELINE_VARIANTS["sharded"].n_shards == 2
+    assert family_baseline("sharded") is SHARDED_BASELINE
+    x = _blobs(3, 500, 16)
+    sh = registry.create("sharded", dataclasses.replace(
+        SHARDED_BASELINE, nlist=16, kmeans_iters=2, n_shards=4))
+    sh.build(x)
+    st = sh.stats()
+    assert st["n_shards"] == 4 and sum(st["shard_sizes"]) == 500
+    assert st["shard_skew"] >= 1.0
+    assert st["pad_overhead"] >= 1.0
+
+
+def test_sharded_on_device_mesh_subprocess():
+    """Real multi-device execution: place the shard axis on a forced
+    4-device ("shard",) mesh; results must match the single-device run
+    and the per-shard arrays must actually span the devices."""
+    script = """
+import dataclasses, numpy as np, jax
+from repro.anns import SearchParams, registry
+from repro.anns.engine import SHARDED_BASELINE
+from repro.launch.mesh import make_shard_mesh
+
+assert jax.device_count() == 4, jax.devices()
+rng = np.random.default_rng(0)
+x = rng.standard_normal((2000, 32)).astype(np.float32)
+q = rng.standard_normal((8, 32)).astype(np.float32)
+v = dataclasses.replace(SHARDED_BASELINE, nlist=32, kmeans_iters=2,
+                        n_shards=4)
+sh = registry.create("sharded", v)
+sh.build(x)
+ref = sh.search(q, SearchParams(k=10, ef=128))
+sh.place_on_mesh(make_shard_mesh(4))
+assert len(sh.index.base_q.sharding.device_set) == 4
+got = sh.search(q, SearchParams(k=10, ef=128))
+assert np.array_equal(np.asarray(ref.ids), np.asarray(got.ids))
+assert np.allclose(np.asarray(ref.dists), np.asarray(got.dists))
+print('OK')
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
