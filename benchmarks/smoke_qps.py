@@ -1,0 +1,70 @@
+"""CI bench smoke: a small ``qps_recall_curve`` for ``ivf`` vs ``sharded``
+written to a ``BENCH_*.json`` artifact — the seed of the perf trajectory.
+
+Every CI run leaves one machine-readable record of the QPS/recall frontier
+plus the footprint split (``memory_bytes`` vs ``device_memory_bytes``), so
+regressions in either axis show up as a diff between artifacts rather
+than an anecdote.  Sized for CI wall-clock, not statistical rigor —
+``benchmarks/table3_qps_recall.py`` is the real harness.
+
+    PYTHONPATH=src python benchmarks/smoke_qps.py --out .
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import time
+
+
+def run(out_dir: str = ".", n_base: int = 2000, n_query: int = 32,
+        repeats: int = 1, backends=("ivf", "sharded")) -> str:
+    import jax
+    from repro.anns import SearchParams, make_dataset
+    from repro.anns import registry
+    from repro.anns.bench import build_timed, qps_recall_curve
+    from repro.anns.engine import family_baseline
+
+    ds = make_dataset("sift-128-euclidean", n_base=n_base, n_query=n_query)
+    payload = {
+        "bench": "smoke_qps",
+        "dataset": "sift-128-euclidean",
+        "n_base": n_base,
+        "n_query": n_query,
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "unix_time": time.time(),
+        "curves": {},
+    }
+    for backend in backends:
+        v = dataclasses.replace(family_baseline(backend),
+                                nlist=32, kmeans_iters=2)
+        b = registry.create(backend, v, metric=ds.metric)
+        build_s = build_timed(b, ds.base)
+        pts = qps_recall_curve(b, ds, ef_sweep=(16, 64, 128),
+                               repeats=repeats,
+                               base_params=SearchParams(k=10),
+                               build_seconds=build_s)
+        payload["curves"][backend] = [dataclasses.asdict(p) for p in pts]
+        for p in pts:
+            print(f"smoke/{backend}/ef{p.ef}: qps={p.qps:.0f} "
+                  f"recall={p.recall:.3f} mem_mb={p.memory_bytes/1e6:.1f} "
+                  f"dev_mem_mb={p.device_memory_bytes/1e6:.1f}")
+    path = os.path.join(out_dir, "BENCH_qps_smoke.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=".")
+    ap.add_argument("--n-base", type=int, default=2000)
+    ap.add_argument("--n-query", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=1)
+    args = ap.parse_args()
+    run(out_dir=args.out, n_base=args.n_base, n_query=args.n_query,
+        repeats=args.repeats)

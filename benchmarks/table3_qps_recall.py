@@ -60,12 +60,14 @@ def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                              "glass_qps": None,
                              "improvement_pct": float("nan"),
                              "build_seconds": pt.build_seconds,
-                             "memory_bytes": pt.memory_bytes})
+                             "memory_bytes": pt.memory_bytes,
+                             "device_memory_bytes": pt.device_memory_bytes})
                 print(csv_row(
                     f"table3/{name}/{backend}/exact", 1e6 / pt.qps,
                     f"qps={pt.qps:.0f};recall=1.000;"
                     f"build_s={pt.build_seconds:.2f};"
-                    f"mem_mb={pt.memory_bytes/1e6:.1f}"))
+                    f"mem_mb={pt.memory_bytes/1e6:.1f};"
+                    f"dev_mem_mb={pt.device_memory_bytes/1e6:.1f}"))
                 continue
             curves = {
                 "glass": _curve(GLASS_BASELINE, backend, ds, repeats),
@@ -83,6 +85,7 @@ def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                     "crinn_qps": qc, "glass_qps": qb, "improvement_pct": imp,
                     "build_seconds": crinn_pt.build_seconds,
                     "memory_bytes": crinn_pt.memory_bytes,
+                    "device_memory_bytes": crinn_pt.device_memory_bytes,
                 })
                 us = 1e6 / qc if qc else float("nan")
                 print(csv_row(
@@ -90,7 +93,8 @@ def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                     f"crinn_qps={qc and round(qc)};glass_qps={qb and round(qb)};"
                     f"improvement={imp:+.1f}%;"
                     f"build_s={crinn_pt.build_seconds:.2f};"
-                    f"mem_mb={crinn_pt.memory_bytes/1e6:.1f}"))
+                    f"mem_mb={crinn_pt.memory_bytes/1e6:.1f};"
+                    f"dev_mem_mb={crinn_pt.device_memory_bytes/1e6:.1f}"))
     return rows
 
 

@@ -23,6 +23,24 @@ from repro.anns.backends.graph_beam import GraphBeamBackend
 from repro.anns.registry import register
 
 
+def fp32_rescore(base, queries, cand_ids, *, metric: str, valid=None):
+    """Masked fp32 re-scoring of (B, M) candidate rows of ``base`` —
+    the per-shard form of the rerank.
+
+    No top-k cut: a per-shard body (unrolled on one device, shard_mapped
+    on a mesh) re-scores its local shortlist against its *own* base slice
+    and leaves the cut to the score merge, so the rerank distance of a
+    vector is computed on the one device that holds it.  ``cand_ids`` indexes rows of ``base``
+    (global positions for the unsharded store, shard-local positions for
+    a slice); invalid slots score BIG instead of being re-scored as
+    whatever row they were clamped to.
+    """
+    d = search_lib._qdist(queries.astype(jnp.float32), base[cand_ids], metric)
+    if valid is not None:
+        d = jnp.where(valid, d, search_lib.BIG)
+    return d
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
 def fp32_rerank(base, queries, cand_ids, *, k: int, metric: str,
                 valid=None):
@@ -31,14 +49,10 @@ def fp32_rerank(base, queries, cand_ids, *, k: int, metric: str,
     Candidate order does not matter; duplicates are fine (set-recall is
     unaffected and ties keep the first occurrence).  ``valid`` (optional
     (B, M) bool) marks real candidates: invalid slots — pad entries from
-    ragged shortlists (IVF cells, future sharded merges) — keep BIG
-    distance instead of being re-scored as whatever id they were clamped
-    to.
+    ragged shortlists (IVF cells, sharded merges) — keep BIG distance
+    (see :func:`fp32_rescore`, the cut-free form this composes).
     """
-    q32 = queries.astype(jnp.float32)
-    d = search_lib._qdist(q32, base[cand_ids], metric)
-    if valid is not None:
-        d = jnp.where(valid, d, search_lib.BIG)
+    d = fp32_rescore(base, queries, cand_ids, metric=metric, valid=valid)
     nd, order = jax.lax.top_k(-d, k)
     ids = jnp.take_along_axis(cand_ids, order, axis=1)
     return ids, -nd

@@ -8,17 +8,28 @@ batch runs as
    cells *and* with them the owning shards (``cell_shard`` is a static
    map): a probed cell contributes candidates only on the shard that owns
    it, every other shard sees a masked (pad) row.
-2. **per-shard scan** — each shard gathers its probed cells' padded rows
-   from its local table and scores them densely (int8 dequant by default,
-   fp32 via the replicated store when ``quantized=False``), keeping its
-   own top-``m`` shortlist.  The stage is a ``vmap`` over the leading
-   shard axis: on one device it is a loop; placed on a ``("shard",)``
-   mesh (:func:`repro.anns.ivf.sharding.place_on_mesh`) XLA partitions
-   it so every device scans only its resident slice.
-3. **merge = fp32 rerank** — per-shard shortlists are concatenated, cut
-   to the global top-``m`` by scan distance, and handed to the standalone
-   :func:`~repro.anns.backends.quantized.fp32_rerank` with their validity
-   mask (ragged shortlists never resurrect pad slots).
+2. **per-shard scan + local fp32 rerank** — each shard gathers its probed
+   cells' padded rows from its local table, scores them densely (int8
+   dequant by default, fp32 via its own ``base_f`` slice when
+   ``quantized=False``), keeps its top-``m`` shortlist, and immediately
+   re-scores that shortlist in fp32 against its *own* ``base_f`` slice
+   (:func:`~repro.anns.backends.quantized.fp32_rescore`).  There is no
+   replicated rerank store: the rerank distance of a vector is computed
+   on the one shard that holds it.
+3. **score merge** — per-shard shortlists (ids + scan scores + reranked
+   scores + validity, (S, B, m) total) meet, are cut to the global
+   top-``m`` by scan distance, and the final top-``k`` is read off the
+   already-reranked scores.  Because a rerank distance is the same
+   wherever it is computed, this is provably identical to reranking
+   after the concat — with O(S*B*m) merge traffic instead of an (N, d)
+   fp32 store on every device.
+
+On one device stage 2 is a ``vmap`` over the leading shard axis; placed
+on a ``("shard",)`` mesh (:meth:`ShardedBackend.place_on_mesh`) it runs
+as an explicit ``shard_map`` whose only collectives are the shortlist
+``all_gather`` and a scalar ``psum`` — the merge traffic is bounded by
+construction, not by partitioner luck (pinned by the
+``repro.dist.hlo.collective_bytes`` test).
 
 Because the shard slices are byte-identical views of the unsharded
 arrays and every stage-width (nprobe, m) comes from the helpers shared
@@ -39,10 +50,11 @@ from repro.anns import search as search_lib
 from repro.anns.api import SearchParams, SearchResult
 from repro.anns.backends.ivf import (nprobe_for, round_nprobe,
                                      shortlist_width)
-from repro.anns.backends.quantized import fp32_rerank
+from repro.anns.backends.quantized import fp32_rescore
 from repro.anns.ivf.layout import build_ivf
 from repro.anns.ivf.sharding import (ShardedIvfIndex, place_on_mesh,
-                                     shard_ivf, sharded_stats)
+                                     shard_ivf, shard_memory_bytes,
+                                     sharded_stats)
 from repro.anns.registry import register
 from repro.kernels.distance.ops import pairwise_distance
 from repro.kernels.topk.ops import topk_smallest
@@ -50,65 +62,148 @@ from repro.kernels.topk.ops import topk_smallest
 BIG = search_lib.BIG
 
 
+def _route(centroids, cell_shard, cell_row, queries, *, nprobe: int,
+           metric: str):
+    """Coarse stage doubling as routing: top-nprobe cells plus their
+    owning shard / local row, all replicated (O(B*nprobe) scalars)."""
+    q32 = queries.astype(jnp.float32)
+    dc = pairwise_distance(q32, centroids, metric=metric)       # (B, C)
+    _, probe = topk_smallest(dc, nprobe)                        # (B, nprobe)
+    return q32, cell_shard[probe], cell_row[probe]
+
+
+def _scan_rerank_block(shard_id, cells_j, v0_j, bq_j, sc_j, bf_j,
+                       q32, owner, row, *, m_shard: int, metric: str,
+                       quantized: bool):
+    """One shard's scan + shard-local fp32 rerank.
+
+    Runs unrolled per shard (single device) or inside ``shard_map``
+    (mesh) — either way on the same (B, ...) shapes as the unsharded
+    ``ivf`` program, and everything here touches only the shard's own
+    slices.  A shard owning
+    zero cells (``n_shards`` beyond the non-empty cell count) sees an
+    all-masked candidate block and returns an all-invalid shortlist.
+    Returns (global positions, scan dists, reranked dists, validity,
+    scanned count), each (B, m_shard) except the scalar count.
+    """
+    B = q32.shape[0]
+    mine = owner == shard_id                                # (B, nprobe)
+    cand = cells_j[jnp.where(mine, row, 0)]                 # (B, np, pad)
+    cand = jnp.where(mine[..., None], cand, -1).reshape(B, -1)
+    valid = cand >= 0
+    pos = jnp.where(valid, cand, 0)                         # local pos
+    if quantized:
+        vecs = bq_j[pos].astype(jnp.float32) * sc_j[pos][..., None]
+    else:
+        vecs = bf_j[pos]
+    d = search_lib._qdist(q32, vecs, metric)
+    d = jnp.where(valid, d, BIG)
+    nd, keep = jax.lax.top_k(-d, m_shard)
+    lpos = jnp.take_along_axis(pos, keep, axis=1)
+    kept_valid = jnp.take_along_axis(valid, keep, axis=1)
+    # shard-local fp32 rerank: exact re-scoring against this shard's own
+    # fp32 slice — the merge then needs scores only, never vectors
+    rd = fp32_rescore(bf_j, q32, lpos, metric=metric, valid=kept_valid)
+    return lpos + v0_j, -nd, rd, kept_valid, jnp.sum(valid)
+
+
+def _merge_topk(gpos, sd, rd, valid, *, k: int, m_total: int):
+    """Score merge over stacked (S, B, m) shortlists: cut to the global
+    top-``m_total`` by scan distance (the same set the rerank-after-concat
+    pipeline scored), then read the final top-``k`` off the shard-local
+    reranked distances."""
+    B = gpos.shape[1]
+    gpos = gpos.transpose(1, 0, 2).reshape(B, -1)               # (B, S*m)
+    sd = sd.transpose(1, 0, 2).reshape(B, -1)
+    rd = rd.transpose(1, 0, 2).reshape(B, -1)
+    valid = valid.transpose(1, 0, 2).reshape(B, -1)
+    _, keep = jax.lax.top_k(-jnp.where(valid, sd, BIG), m_total)
+    short_rd = jnp.take_along_axis(rd, keep, axis=1)
+    short_pos = jnp.take_along_axis(gpos, keep, axis=1)
+    nd, order = jax.lax.top_k(-short_rd, k)
+    return jnp.take_along_axis(short_pos, order, axis=1), -nd
+
+
 @functools.partial(jax.jit, static_argnames=(
     "nprobe", "k", "m", "metric", "quantized"))
 def _sharded_search(centroids, cell_shard, cell_row, cells, vec_start,
-                    base_q, scales, base, ids, queries, *,
+                    base_q, scales, base_f, ids, queries, *,
                     nprobe: int, k: int, m: int, metric: str,
                     quantized: bool):
     """(B, d) queries -> (ids (B, k) original ids, dists (B, k) fp32).
 
-    The shard axis is the leading axis of ``cells``/``vec_start``/
-    ``base_q``/``scales``; everything routed per shard stays inside the
-    vmapped body, so under a ``("shard",)`` placement the only
-    cross-device traffic is the coarse broadcast and the (S, B, m)
-    shortlist concat feeding the merge.
+    Single-device form: the per-shard scan+rerank body is *unrolled*
+    over the (static, small) shard count rather than vmapped — every
+    per-shard op then has exactly the shapes of the unsharded ``ivf``
+    program, so scan and rerank floats are bit-identical to it (a
+    vmapped body adds a leading shard axis and lets XLA reassociate the
+    fp32 reductions).  The mesh-placed form is
+    :func:`_make_placed_search` — same body on the same squeezed shapes,
+    explicit collectives.
     """
-    B = queries.shape[0]
     n_shards, _, pad = cells.shape
-    q32 = queries.astype(jnp.float32)
-
-    dc = pairwise_distance(q32, centroids, metric=metric)       # (B, C)
-    _, probe = topk_smallest(dc, nprobe)                        # (B, nprobe)
-    owner = cell_shard[probe]                                   # routing
-    row = cell_row[probe]
-
+    q32, owner, row = _route(centroids, cell_shard, cell_row, queries,
+                             nprobe=nprobe, metric=metric)
     m_shard = min(m, nprobe * pad)      # static: a shard never needs more
 
-    def per_shard(shard_id, cells_j, v0_j, bq_j, sc_j):
-        mine = owner == shard_id                                # (B, nprobe)
-        cand = cells_j[jnp.where(mine, row, 0)]                 # (B, np, pad)
-        cand = jnp.where(mine[..., None], cand, -1).reshape(B, -1)
-        valid = cand >= 0
-        pos = jnp.where(valid, cand, 0)                         # local pos
-        if quantized:
-            vecs = bq_j[pos].astype(jnp.float32) * sc_j[pos][..., None]
-        else:
-            vecs = base[v0_j + pos]
-        d = search_lib._qdist(q32, vecs, metric)
-        d = jnp.where(valid, d, BIG)
-        nd, keep = jax.lax.top_k(-d, m_shard)
-        gpos = jnp.take_along_axis(pos, keep, axis=1) + v0_j    # global pos
-        kept_valid = jnp.take_along_axis(valid, keep, axis=1)
-        return gpos, -nd, kept_valid, jnp.sum(valid)
+    outs = [_scan_rerank_block(
+        jnp.int32(j), cells[j], vec_start[j], base_q[j], scales[j],
+        base_f[j], q32, owner, row,
+        m_shard=m_shard, metric=metric, quantized=quantized)
+        for j in range(n_shards)]
+    gpos, sd, rd, valid = (jnp.stack(t) for t in list(zip(*outs))[:4])
+    scanned = sum(o[4] for o in outs)
 
-    gpos, d, valid, scanned = jax.vmap(per_shard)(
-        jnp.arange(n_shards, dtype=jnp.int32), cells, vec_start,
-        base_q, scales)
-
-    # merge: concat per-shard shortlists, cut to the global top-m by scan
-    # distance (every shard contributes at most m, so the union provably
-    # contains the unsharded top-m), then fp32-rerank with validity.
-    gpos = gpos.transpose(1, 0, 2).reshape(B, -1)               # (B, S*m)
-    d = d.transpose(1, 0, 2).reshape(B, -1)
-    valid = valid.transpose(1, 0, 2).reshape(B, -1)
     m_total = min(m, n_shards * m_shard)
-    _, keep = jax.lax.top_k(-jnp.where(valid, d, BIG), m_total)
-    short = jnp.take_along_axis(gpos, keep, axis=1)
-    short_valid = jnp.take_along_axis(valid, keep, axis=1)
-    out_pos, out_d = fp32_rerank(base, q32, short, k=k, metric=metric,
-                                 valid=short_valid)
-    return ids[out_pos], out_d, jnp.sum(scanned)
+    out_pos, out_d = _merge_topk(gpos, sd, rd, valid, k=k, m_total=m_total)
+    return ids[out_pos], out_d, scanned
+
+
+def _make_placed_search(mesh):
+    """Mesh form of :func:`_sharded_search`: the per-shard body runs in a
+    ``shard_map`` over the ``"shard"`` axis, so the cross-device traffic
+    is *exactly* the shortlist ``all_gather`` ((S, B, m) ids+scores) plus
+    a scalar ``psum`` — never an (N, d) broadcast, whatever the
+    partitioner would have chosen for the vmapped form."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    @functools.partial(jax.jit, static_argnames=(
+        "nprobe", "k", "m", "metric", "quantized"))
+    def placed_search(centroids, cell_shard, cell_row, cells, vec_start,
+                      base_q, scales, base_f, ids, queries, *,
+                      nprobe: int, k: int, m: int, metric: str,
+                      quantized: bool):
+        n_shards, _, pad = cells.shape
+        q32, owner, row = _route(centroids, cell_shard, cell_row, queries,
+                                 nprobe=nprobe, metric=metric)
+        m_shard = min(m, nprobe * pad)
+
+        def block(cells_b, v0_b, bq_b, sc_b, bf_b, q32_, owner_, row_):
+            j = jax.lax.axis_index("shard")
+            gpos, sd, rd, valid, scanned = _scan_rerank_block(
+                j, cells_b[0], v0_b[0], bq_b[0], sc_b[0], bf_b[0],
+                q32_, owner_, row_, m_shard=m_shard, metric=metric,
+                quantized=quantized)
+            # the merge traffic, in full: (S, B, m_shard) ids+scores
+            out = [jax.lax.all_gather(t, "shard")
+                   for t in (gpos, sd, rd, valid)]
+            return (*out, jax.lax.psum(scanned, "shard"))
+
+        gpos, sd, rd, valid, scanned = shard_map(
+            block, mesh=mesh,
+            in_specs=(P("shard", None, None), P("shard"),
+                      P("shard", None, None), P("shard", None),
+                      P("shard", None, None), P(), P(), P()),
+            out_specs=(P(), P(), P(), P(), P()),
+            check_rep=False)(cells, vec_start, base_q, scales, base_f,
+                             q32, owner, row)
+        m_total = min(m, n_shards * m_shard)
+        out_pos, out_d = _merge_topk(gpos, sd, rd, valid,
+                                     k=k, m_total=m_total)
+        return ids[out_pos], out_d, scanned
+
+    return placed_search
 
 
 @register("sharded")
@@ -116,6 +211,9 @@ class ShardedBackend:
     """Cell-routed multi-shard IVF (see module docstring)."""
 
     name = "sharded"
+    # state-dict format: v2 ships the rerank store as per-shard
+    # ``shardN/base_f`` leaves; v1 (replicated ``base``) still loads.
+    STATE_FORMAT = 2
 
     def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
         if variant is None:
@@ -125,6 +223,7 @@ class ShardedBackend:
         self.metric = metric
         self.seed = seed
         self.index: ShardedIvfIndex | None = None
+        self._placed_search = None
 
     # -- AnnsIndex protocol ------------------------------------------------
     def build(self, base: np.ndarray) -> ShardedIvfIndex:
@@ -135,20 +234,25 @@ class ShardedBackend:
                           metric=self.metric, seed=self.seed,
                           max_cell=getattr(v, "max_cell", 0) or None)
         self.index = shard_ivf(inner, max(1, int(v.n_shards)))
+        self._placed_search = None
         return self.index
 
     def place_on_mesh(self, mesh) -> None:
         """Pin each shard's slice to its device on a ``("shard",)`` mesh
-        (see ``repro.launch.mesh.make_shard_mesh``)."""
+        (see ``repro.launch.mesh.make_shard_mesh``) and switch to the
+        shard_map search form with explicit merge collectives."""
         assert self.index is not None, "build() first"
         self.index = place_on_mesh(self.index, mesh)
+        self._placed_search = _make_placed_search(mesh)
 
     def stats(self) -> dict:
         assert self.index is not None, "build() first"
         return sharded_stats(self.index)
 
-    def search(self, queries, params: SearchParams) -> SearchResult:
-        assert self.index is not None, "build() first"
+    def _invocation(self, queries, params: SearchParams):
+        """Resolve one search call to (positional arrays, static knobs) —
+        shared by :meth:`search` and :meth:`lower_search` so HLO-level
+        tests inspect exactly the program that serves."""
         idx = self.index
         p = params.resolved(self.variant)
         k = min(p.k, idx.n)
@@ -160,42 +264,67 @@ class ShardedBackend:
             nprobe = min(round_nprobe(min_probe), idx.nlist)
         m = shortlist_width(p, k, idx.n, nprobe, idx.cell_pad)
         quantized = True if params.quantized is None else bool(params.quantized)
-        out_ids, out_d, scanned = _sharded_search(
-            idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
-            idx.vec_start, idx.base_q, idx.scales, idx.base, idx.ids,
-            jnp.asarray(queries, jnp.float32),
-            nprobe=nprobe, k=k, m=m, metric=self.metric,
-            quantized=quantized)
-        return SearchResult(ids=out_ids, dists=out_d, steps=nprobe,
+        args = (idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
+                idx.vec_start, idx.base_q, idx.scales, idx.base_f, idx.ids,
+                jnp.asarray(queries, jnp.float32))
+        statics = dict(nprobe=nprobe, k=k, m=m, metric=self.metric,
+                       quantized=quantized)
+        return args, statics
+
+    def _search_fn(self):
+        return self._placed_search or _sharded_search
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        assert self.index is not None, "build() first"
+        args, statics = self._invocation(queries, params)
+        out_ids, out_d, scanned = self._search_fn()(*args, **statics)
+        return SearchResult(ids=out_ids, dists=out_d,
+                            steps=statics["nprobe"],
                             expansions=scanned, backend=self.name)
 
+    def lower_search(self, queries, params: SearchParams):
+        """AOT-lower the jitted search (the placed form after
+        :meth:`place_on_mesh`) for HLO inspection — e.g. bounding merge
+        collective bytes with ``repro.dist.hlo.collective_bytes``."""
+        assert self.index is not None, "build() first"
+        args, statics = self._invocation(queries, params)
+        return self._search_fn().lower(*args, **statics)
+
     def memory_bytes(self) -> int:
-        idx = self.index
-        if idx is None:
+        """Total logical footprint: every stacked per-shard array in
+        full, replicated routing state once."""
+        if self.index is None:
             return 0
-        arrays = (idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
-                  idx.vec_start, idx.base_q, idx.scales, idx.base, idx.ids)
-        return (sum(a.size * a.dtype.itemsize for a in arrays)
-                + idx.offsets.nbytes + idx.cell_bounds.nbytes
-                + idx.vec_bounds.nbytes)
+        return shard_memory_bytes(self.index)[0]
+
+    def device_memory_bytes(self) -> int:
+        """Worst single-device resident bytes under ``place_on_mesh``:
+        one shard's slices plus the replicated routing state.  Unlike the
+        pre-base_f layout there is no (N, d) fp32 term — this is the
+        number that scales the dataset with the mesh."""
+        if self.index is None:
+            return 0
+        return shard_memory_bytes(self.index)[1]
 
     # -- checkpointing: device-local slices as separate leaves -------------
     def to_state_dict(self) -> dict:
         """Per-shard arrays are saved *unstacked* — one leaf per shard —
         so the checkpoint's per-leaf bounds framing carries exactly the
         slice each serving device loads (same format as every other
-        index checkpoint; see ``repro.ckpt.index_io``)."""
+        index checkpoint; see ``repro.ckpt.index_io``).  Format v2: the
+        fp32 rerank store travels as ``shardN/base_f`` slices; there is
+        no replicated ``base`` leaf."""
         idx = self.index
         assert idx is not None, "build() first"
         state = {
             "backend": self.name,
+            "state_format": self.STATE_FORMAT,
             "metric": idx.metric,
             "n_shards": idx.n_shards,
             "centroids": np.asarray(idx.centroids),
             "cell_shard": np.asarray(idx.cell_shard),
             "cell_row": np.asarray(idx.cell_row),
             "vec_start": np.asarray(idx.vec_start),
-            "base": np.asarray(idx.base),
             "ids": np.asarray(idx.ids),
             "offsets": np.asarray(idx.offsets),
             "cell_bounds": np.asarray(idx.cell_bounds),
@@ -205,11 +334,28 @@ class ShardedBackend:
             state[f"shard{j}/cells"] = np.asarray(idx.cells[j])
             state[f"shard{j}/base_q"] = np.asarray(idx.base_q[j])
             state[f"shard{j}/scales"] = np.asarray(idx.scales[j])
+            state[f"shard{j}/base_f"] = np.asarray(idx.base_f[j])
         return state
 
     def from_state_dict(self, state: dict) -> None:
         self.metric = state["metric"]
         n_shards = int(state["n_shards"])
+        fmt = int(state.get("state_format", 1))
+        if fmt >= 2:
+            base_f = jnp.stack([jnp.asarray(state[f"shard{j}/base_f"])
+                                for j in range(n_shards)])
+        else:
+            # v1 checkpoints carried a replicated (N, d) rerank store;
+            # re-slice it into the stacked per-shard form (byte-identical
+            # to what shard_ivf would have produced)
+            base = np.asarray(state["base"], np.float32)
+            vb = np.asarray(state["vec_bounds"])
+            npad = int(np.asarray(state["shard0/base_q"]).shape[0])
+            bf = np.zeros((n_shards, npad, base.shape[1]), np.float32)
+            for j in range(n_shards):
+                v0, v1 = int(vb[j]), int(vb[j + 1])
+                bf[j, : v1 - v0] = base[v0:v1]
+            base_f = jnp.asarray(bf)
         self.index = ShardedIvfIndex(
             centroids=jnp.asarray(state["centroids"]),
             cell_shard=jnp.asarray(state["cell_shard"]),
@@ -221,9 +367,10 @@ class ShardedBackend:
                               for j in range(n_shards)]),
             scales=jnp.stack([jnp.asarray(state[f"shard{j}/scales"])
                               for j in range(n_shards)]),
-            base=jnp.asarray(state["base"]),
+            base_f=base_f,
             ids=jnp.asarray(state["ids"]),
             offsets=np.asarray(state["offsets"]),
             cell_bounds=np.asarray(state["cell_bounds"]),
             vec_bounds=np.asarray(state["vec_bounds"]),
             metric=state["metric"])
+        self._placed_search = None

@@ -36,6 +36,12 @@ class CurvePoint:
     # (IVF trades build time + padded-layout bytes for scan speed).
     build_seconds: float = 0.0
     memory_bytes: int = 0
+    # worst per-device resident bytes once the index is mesh-placed — a
+    # layout property, recorded whether or not this run placed it (an
+    # unplaced process holds memory_bytes).  Differs from memory_bytes
+    # only for backends that split state across a mesh (the sharded
+    # backend's whole point: device memory is O(N/S * d), total O(N * d)).
+    device_memory_bytes: int = 0
 
 
 DEFAULT_EF_SWEEP = (10, 16, 24, 32, 48, 64, 96, 128, 192, 256)
@@ -90,11 +96,15 @@ def measure_point(target, ds: Dataset, *, params: SearchParams | None = None,
         times.append(time.perf_counter() - t0)
     t = float(np.median(times))
     rec = recall_at_k(np.asarray(res.ids), ds.gt, params.k)
+    mem = int(backend.memory_bytes())
+    # backends without a mesh split are single-device: worst device == total
+    dev_fn = getattr(backend, "device_memory_bytes", None)
+    dev = int(dev_fn()) if dev_fn is not None else mem
     return CurvePoint(ef=params.ef, qps=len(ds.queries) / t, recall=rec,
                       p50_ms=1e3 * t / len(ds.queries),
                       backend=getattr(backend, "name", ""),
                       build_seconds=build_seconds,
-                      memory_bytes=int(backend.memory_bytes()))
+                      memory_bytes=mem, device_memory_bytes=dev)
 
 
 def qps_recall_curve(target, ds: Dataset, *, k: int | None = None,

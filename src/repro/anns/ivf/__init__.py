@@ -17,8 +17,9 @@ from repro.anns.ivf.kmeans import (assign, assign_ref, kmeans_fit,
                                    kmeans_ref, lloyd_step, split_oversized)
 from repro.anns.ivf.layout import IvfIndex, build_ivf, ivf_stats
 from repro.anns.ivf.sharding import (ShardedIvfIndex, shard_ivf,
-                                     sharded_stats)
+                                     shard_memory_bytes, sharded_stats)
 
 __all__ = ["assign", "assign_ref", "kmeans_fit", "kmeans_ref", "lloyd_step",
            "split_oversized", "IvfIndex", "build_ivf", "ivf_stats",
-           "ShardedIvfIndex", "shard_ivf", "sharded_stats"]
+           "ShardedIvfIndex", "shard_ivf", "shard_memory_bytes",
+           "sharded_stats"]

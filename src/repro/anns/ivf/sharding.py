@@ -16,9 +16,12 @@ balanced-assignment cap (``build_ivf(max_cell=...)``) exists: ``cell_pad``
 is the max cell size, so one skewed cell would inflate every shard's
 gather.
 
-The coarse quantizer (centroids) and the fp32 rerank store stay
-replicated — coarse routing is tiny, and the rerank is the merge stage
-that runs where the shortlists meet.
+Only the coarse quantizer (centroids), the routing maps, and the
+position->id remap stay replicated — all O(C) or O(N) scalars.  The fp32
+rerank store is ``base_f``: the same byte-identical slicing trick as
+``base_q``, stacked (S, Npad, d), so each shard reranks its own shortlist
+locally and the merge moves only (S, B, m) ids+scores.  No device holds a
+replicated (N, d) fp32 array; per-device memory is O(N/S * d).
 """
 from __future__ import annotations
 
@@ -37,7 +40,10 @@ def balanced_cell_ranges(counts: np.ndarray, n_shards: int) -> np.ndarray:
 
     A prefix walk: shard j ends at the first cell where the cumulative
     count reaches ``(j+1)/S`` of the total.  Shards may own zero cells
-    when ``n_shards`` exceeds the cell count.
+    when ``n_shards`` exceeds the (non-empty) cell count; an all-empty
+    layout (total count 0) degenerates to S-1 empty shards plus one
+    owning every cell — both extremes keep the bounds monotone and
+    covering.
     """
     counts = np.asarray(counts)
     cum = np.concatenate([[0], np.cumsum(counts)])
@@ -55,9 +61,9 @@ class ShardedIvfIndex:
     """Stacked per-shard view of an :class:`IvfIndex` (leading shard axis).
 
     ``cells`` rows hold *local* positions into the shard's own
-    ``base_q``/``scales`` slice; ``vec_start[j]`` maps them back to global
-    cell-major positions, which index the replicated ``base`` (fp32
-    rerank store) and ``ids`` (position -> original id).
+    ``base_q``/``scales``/``base_f`` slices; ``vec_start[j]`` maps them
+    back to global cell-major positions, which index the replicated
+    ``ids`` (position -> original id) at the very end of the merge.
     """
     centroids: jax.Array       # (C, d) f32, replicated coarse quantizer
     cell_shard: jax.Array      # (C,) int32 cell -> owning shard (routing)
@@ -66,7 +72,7 @@ class ShardedIvfIndex:
     vec_start: jax.Array       # (S,) int32 global position of shard block
     base_q: jax.Array          # (S, Npad, d) int8 device-local codes
     scales: jax.Array          # (S, Npad) f32 device-local dequant scales
-    base: jax.Array            # (N, d) f32 global cell-major (rerank store)
+    base_f: jax.Array          # (S, Npad, d) f32 device-local rerank slices
     ids: jax.Array             # (N,) int32 global position -> original id
     offsets: np.ndarray        # (C+1,) global CSR boundaries (host)
     cell_bounds: np.ndarray    # (S+1,) cells per shard (host)
@@ -75,7 +81,7 @@ class ShardedIvfIndex:
 
     @property
     def n(self) -> int:
-        return int(self.base.shape[0])
+        return int(self.ids.shape[0])
 
     @property
     def nlist(self) -> int:
@@ -99,9 +105,12 @@ class ShardedIvfIndex:
 def shard_ivf(index: IvfIndex, n_shards: int) -> ShardedIvfIndex:
     """Slice a built :class:`IvfIndex` into ``n_shards`` cell ranges.
 
-    Pure re-layout: codes, scales, and the rerank store are byte-identical
-    slices of the unsharded arrays, so scan distances — and therefore
-    merged results — match the unsharded backend exactly.
+    Pure re-layout: codes, scales, and the fp32 rerank slices are
+    byte-identical views of the unsharded arrays, so scan *and* rerank
+    distances — and therefore merged results — match the unsharded
+    backend exactly.  Zero-width shards (``n_shards`` beyond the
+    non-empty cell count) hold all-pad tables and contribute nothing at
+    search time.
     """
     assert n_shards >= 1, n_shards
     counts = np.diff(index.offsets)
@@ -115,6 +124,7 @@ def shard_ivf(index: IvfIndex, n_shards: int) -> ShardedIvfIndex:
     d = index.base.shape[1]
 
     g_cells = np.asarray(index.cells)
+    g_base = np.asarray(index.base)
     g_base_q = np.asarray(index.base_q)
     g_scales = np.asarray(index.scales)
 
@@ -123,6 +133,7 @@ def shard_ivf(index: IvfIndex, n_shards: int) -> ShardedIvfIndex:
     cells = np.full((n_shards, cmax, pad), -1, np.int32)
     base_q = np.zeros((n_shards, npad, d), g_base_q.dtype)
     scales = np.zeros((n_shards, npad), np.float32)
+    base_f = np.zeros((n_shards, npad, d), np.float32)
     for j in range(n_shards):
         c0, c1 = int(cb[j]), int(cb[j + 1])
         v0, v1 = int(vb[j]), int(vb[j + 1])
@@ -132,6 +143,7 @@ def shard_ivf(index: IvfIndex, n_shards: int) -> ShardedIvfIndex:
         cells[j, : c1 - c0] = np.where(g >= 0, g - v0, -1)
         base_q[j, : v1 - v0] = g_base_q[v0:v1]
         scales[j, : v1 - v0] = g_scales[v0:v1]
+        base_f[j, : v1 - v0] = g_base[v0:v1]
 
     return ShardedIvfIndex(
         centroids=index.centroids,
@@ -141,7 +153,7 @@ def shard_ivf(index: IvfIndex, n_shards: int) -> ShardedIvfIndex:
         vec_start=jnp.asarray(vb[:-1].astype(np.int32)),
         base_q=jnp.asarray(base_q),
         scales=jnp.asarray(scales),
-        base=index.base,
+        base_f=jnp.asarray(base_f),
         ids=index.ids,
         offsets=np.asarray(index.offsets),
         cell_bounds=cb,
@@ -151,9 +163,11 @@ def shard_ivf(index: IvfIndex, n_shards: int) -> ShardedIvfIndex:
 
 def place_on_mesh(index: ShardedIvfIndex, mesh) -> ShardedIvfIndex:
     """Device-place the stacked arrays: per-shard leaves split over the
-    mesh's ``"shard"`` axis, routing/merge state replicated.  Under jit
-    the vmapped scan then partitions across devices with no resharding —
-    only the shortlist concat (the merge) moves data."""
+    mesh's ``"shard"`` axis, routing/merge state replicated.  No leaf is
+    a replicated (N, d) fp32 array — the rerank store travels as the
+    sharded ``base_f`` slices, so the only cross-device traffic at search
+    time is the coarse broadcast and the (S, B, m) shortlist gather
+    feeding the score merge."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     def put(x, spec):
@@ -166,19 +180,44 @@ def place_on_mesh(index: ShardedIvfIndex, mesh) -> ShardedIvfIndex:
         vec_start=put(index.vec_start, P("shard")),
         base_q=put(index.base_q, P("shard", None, None)),
         scales=put(index.scales, P("shard", None)),
+        base_f=put(index.base_f, P("shard", None, None)),
         centroids=put(index.centroids, P()),
         cell_shard=put(index.cell_shard, P()),
         cell_row=put(index.cell_row, P()),
-        base=put(index.base, P()),
         ids=put(index.ids, P()))
 
 
+def shard_memory_bytes(index: ShardedIvfIndex) -> tuple[int, int]:
+    """(total_bytes, worst_per_device_bytes) of the placed layout.
+
+    ``total`` sums every array once (the stacked per-shard arrays count
+    their full stacked size; replicated state counts once — it is one
+    logical copy however many devices mirror it).  ``worst per-device``
+    is what a single serving device actually holds: the replicated state
+    plus one shard's slice of each stacked array — uniform by
+    construction, since stacking pads every shard to the same width.
+    """
+    stacked = (index.cells, index.vec_start, index.base_q, index.scales,
+               index.base_f)
+    replicated = (index.centroids, index.cell_shard, index.cell_row,
+                  index.ids)
+    stacked_bytes = sum(a.size * a.dtype.itemsize for a in stacked)
+    repl_bytes = (sum(a.size * a.dtype.itemsize for a in replicated)
+                  + index.offsets.nbytes + index.cell_bounds.nbytes
+                  + index.vec_bounds.nbytes)
+    per_device = repl_bytes + stacked_bytes // max(index.n_shards, 1)
+    return repl_bytes + stacked_bytes, per_device
+
+
 def sharded_stats(index: ShardedIvfIndex) -> dict:
-    """Telemetry for the shard layout: per-shard load, skew, and the
+    """Telemetry for the shard layout: per-shard load, skew, the
     stacked-padding overhead (the mesh-scale analogue of
-    ``ivf_stats()["pad_overhead"]``)."""
+    ``ivf_stats()["pad_overhead"]``), and the memory split — total
+    footprint vs worst per-device resident bytes, the quantity that
+    actually binds at serving scale."""
     sizes = np.diff(index.vec_bounds)
     npad = int(index.base_q.shape[1])
+    total, per_device = shard_memory_bytes(index)
     return {
         "n": index.n,
         "nlist": index.nlist,
@@ -192,4 +231,6 @@ def sharded_stats(index: ShardedIvfIndex) -> dict:
         "cell_pad": index.cell_pad,
         # stacked per-shard padding overhead vs the raw CSR blocks
         "pad_overhead": float(index.n_shards * npad / max(index.n, 1)),
+        "memory_bytes": total,
+        "device_memory_bytes": per_device,
     }

@@ -16,6 +16,17 @@ registry on the other side:
 Array leaves travel in the shard file; non-array fields (backend name,
 metric) ride in the manifest's ``extra`` block, so restore knows which
 registry entry to instantiate.
+
+State-dict format versioning: a backend that evolves its layout stamps a
+``state_format`` int into its ``to_state_dict()`` (and declares the
+newest format it understands as a ``STATE_FORMAT`` class attribute).
+The key rides in the manifest like any other non-array field, and the
+backend's ``from_state_dict`` branches on it — e.g. the sharded backend
+loads both v1 (replicated ``base`` rerank store) and v2 (per-shard
+``shardN/base_f`` slices) checkpoints.  :func:`load_index` fails fast
+with a clear error when a checkpoint is *newer* than the installed
+backend, instead of letting ``from_state_dict`` KeyError on leaves it
+has never heard of.
 """
 from __future__ import annotations
 
@@ -73,5 +84,12 @@ def load_index(path: str, variant=None, *, seed: int = 0):
         variant = VariantConfig(**saved_variant)
     backend = registry.create(meta["backend"], variant,
                               metric=meta.get("metric", "l2"), seed=seed)
+    fmt = meta.get("state_format")
+    supported = getattr(type(backend), "STATE_FORMAT", 1)
+    if fmt is not None and int(fmt) > int(supported):
+        raise ValueError(
+            f"{path!r} holds a {meta['backend']!r} index in state format "
+            f"{fmt}, newer than the installed backend's {supported} — "
+            f"rebuild the index or upgrade the serving host")
     backend.from_state_dict({**arrays, **meta})
     return backend

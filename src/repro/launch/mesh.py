@@ -26,10 +26,20 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
 
 def make_shard_mesh(n_shards: int):
     """1-D ``("shard",)`` mesh for the sharded ANNS backend: each device
-    owns one slice of the stacked cell-major layout
+    owns one slice of the stacked cell-major layout — including its own
+    fp32 rerank slice ``base_f``, so per-device memory is O(N/S * d)
     (``repro.anns.ivf.sharding.place_on_mesh``).  CPU tests force host
     devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
     return jax.make_mesh((n_shards,), ("shard",))
+
+
+def shard_mesh_if_available(n_shards: int):
+    """:func:`make_shard_mesh` when the runtime has enough devices for
+    one shard per device, else ``None`` — the caller falls back to the
+    single-device unrolled search (identical results, no placement)."""
+    if n_shards > 1 and jax.device_count() >= n_shards:
+        return make_shard_mesh(n_shards)
+    return None
 
 
 def make_tuned_mesh(tp: int = 16, *, multi_pod: bool = False):

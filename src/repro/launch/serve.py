@@ -17,6 +17,45 @@ import argparse
 import time
 
 
+def _shard_conflict_note(target, n_shards) -> str | None:
+    """Warning line for ``--load-index`` + ``--n-shards``, safe for every
+    backend.
+
+    The shard count is build identity, so it can never be applied to a
+    restored index: sharded checkpoints carry their own count (warn on a
+    mismatch), every other backend has no shard axis at all (warn that
+    the flag is ignored).  Never assumes ``target.index`` exists or has
+    ``n_shards`` — a graph/brute-force restore with ``--n-shards`` set
+    used to either AttributeError here or silently mask the mismatch
+    through a defaulted ``getattr``.
+    """
+    if not n_shards:
+        return None
+    ckpt_shards = getattr(getattr(target, "index", None), "n_shards", None)
+    if ckpt_shards is None:
+        return (f"note: --n-shards {n_shards} ignored — restored "
+                f"{getattr(target, 'name', '?')!r} index has no shard axis")
+    if int(ckpt_shards) != int(n_shards):
+        return (f"note: --n-shards {n_shards} ignored — the shard "
+                f"count is build identity; checkpoint carries "
+                f"n_shards={int(ckpt_shards)}")
+    return None
+
+
+def _memory_line(target) -> str:
+    """Resident-footprint fragment: total, plus the worst-per-device
+    bound when the backend distinguishes them (the sharded backend after
+    the shard-local rerank split).  The per-device figure is a property
+    of the layout — what each device holds once the index is
+    mesh-placed; an unplaced single process holds the total."""
+    total = target.memory_bytes()
+    dev = getattr(target, "device_memory_bytes", target.memory_bytes)()
+    if dev != total:
+        return (f"{total/1e6:.1f} MB total, "
+                f"{dev/1e6:.1f} MB/device when mesh-placed")
+    return f"{total/1e6:.1f} MB resident"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sift-128-euclidean")
@@ -67,32 +106,30 @@ def main():
         target = ckpt.load_index(args.load_index)   # bare AnnsIndex backend
         print(f"restored {target.name!r} index from {args.load_index} "
               f"in {time.time()-t0:.1f}s "
-              f"({target.memory_bytes()/1e6:.1f} MB resident, no rebuild)")
-        if args.n_shards and getattr(target.index, "n_shards",
-                                     args.n_shards) != args.n_shards:
-            print(f"note: --n-shards {args.n_shards} ignored — the shard "
-                  f"count is build identity; checkpoint carries "
-                  f"n_shards={target.index.n_shards}")
+              f"({_memory_line(target)}, no rebuild)")
+        note = _shard_conflict_note(target, args.n_shards)
+        if note:
+            print(note)
     else:
         print(f"building index ({variant.describe()}) ...")
         t0 = time.time()
         target = registry.create(args.backend, variant, metric=ds.metric)
         target.build(ds.base)
-        print(f"built in {time.time()-t0:.1f}s "
-              f"({target.memory_bytes()/1e6:.1f} MB resident)")
+        print(f"built in {time.time()-t0:.1f}s ({_memory_line(target)})")
         if args.save_index:
             ckpt.save_index(args.save_index, target)
             print(f"index state checkpointed to {args.save_index}")
 
     if getattr(target, "name", "") == "sharded":
-        import jax
-        from repro.launch.mesh import make_shard_mesh
+        from repro.launch.mesh import shard_mesh_if_available
         ns = target.index.n_shards
-        if ns > 1 and jax.device_count() >= ns:
+        mesh = shard_mesh_if_available(ns)
+        if mesh is not None:
             # each device holds only its cell shard; run with
             # XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU
-            target.place_on_mesh(make_shard_mesh(ns))
-            print(f"placed {ns} cell shards on {ns} devices")
+            target.place_on_mesh(mesh)
+            print(f"placed {ns} cell shards on {ns} devices "
+                  f"({target.device_memory_bytes()/1e6:.1f} MB/device)")
 
     server = AnnsServer(target, max_batch=args.max_batch,
                         params=SearchParams(k=args.k, ef=args.ef))

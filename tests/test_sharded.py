@@ -1,21 +1,32 @@
 """Sharded multi-device ANNS backend tests.
 
-Three layers of guarantees, all property-based where randomness helps:
+Layered guarantees, property-based where randomness helps:
 
 - **equivalence** — ``sharded(n_shards=1)`` is bit-identical to ``ivf``
-  on random datasets, and any shard count returns the same merged ids at
-  max nprobe (the shard slices are byte-identical views, so scan
-  distances agree exactly).
+  on random datasets, and any shard count returns the same merged ids
+  AND dists at max nprobe: the shard slices are byte-identical views and
+  the shard-local fp32 rerank runs on the exact shapes of the unsharded
+  program, so scan and rerank floats agree exactly.
 - **ragged-shortlist safety** — ``fp32_rerank`` never returns a pad slot
   when handed ragged per-shard shortlists with a validity mask.
 - **edge cases** — ``snap_to_ladder`` off-ladder inputs,
-  ``min_cells_for`` beyond the largest cell, and the k-means
-  balanced-split invariants (cap respected, ids conserved,
-  deterministic).
+  ``min_cells_for`` beyond the largest cell, k-means balanced-split
+  invariants, and zero-width shards (``n_shards`` beyond the non-empty
+  cell count, all-empty layouts).
+- **memory split** — ``memory_bytes`` (total) vs ``device_memory_bytes``
+  (worst per-device; no (N, d) fp32 term post shard-local rerank),
+  surfaced through stats and bench ``CurvePoint``.
+- **checkpoint formats** — v2 (``shardN/base_f`` leaves) roundtrip, v1
+  (replicated ``base``) back-compat load, future-format rejection.
+- **serve driver** — the ``--load-index`` + ``--n-shards`` conflict note
+  is correct for every backend shape (regression: used to AttributeError
+  or silently mask).
 
-The >=10k-vector anchor test pins the acceptance criterion; the
-subprocess test runs the same search with the shard axis *placed* on a
-real (forced-host) device mesh.
+The >=10k-vector anchor test pins the acceptance criterion; subprocess
+tests run the search with the shard axis *placed* on a real
+(forced-host) device mesh and bound the merge collective bytes at the
+HLO level (O(S*B*m), independent of N — the regression the shard-local
+rerank exists to prevent).
 """
 import dataclasses
 import os
@@ -290,6 +301,44 @@ def test_sharded_state_dict_ckpt_roundtrip(big_ds, big_ivf, tmp_path):
     np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
     assert clone.memory_bytes() == sh.memory_bytes()
     assert clone.index.n_shards == 2
+    # v2 layout: the rerank store ships as per-shard leaves, never as a
+    # replicated (N, d) fp32 array
+    state = sh.to_state_dict()
+    assert state["state_format"] == 2
+    assert "base" not in state
+    assert state["shard0/base_f"].dtype == np.float32
+
+
+def test_sharded_v1_state_dict_still_loads(big_ds, big_ivf):
+    """Back-compat: a v1 snapshot (replicated ``base`` rerank store, no
+    ``state_format`` key) must restore into the shard-local layout and
+    search identically."""
+    sh = _sharded_view(big_ivf, 2)
+    state = sh.to_state_dict()
+    # rebuild the v1 shape of the snapshot: replicated base, no base_f
+    v1 = {k: v for k, v in state.items()
+          if not k.endswith("/base_f") and k != "state_format"}
+    v1["base"] = np.asarray(big_ivf.index.base)
+    from repro.anns import registry as reg
+    clone = reg.create("sharded", sh.variant, metric=sh.metric)
+    clone.from_state_dict(v1)
+    np.testing.assert_array_equal(np.asarray(clone.index.base_f),
+                                  np.asarray(sh.index.base_f))
+    p = SearchParams(k=10, ef=64)
+    a, b = sh.search(big_ds.queries, p), clone.search(big_ds.queries, p)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+def test_load_index_rejects_future_state_format(big_ds, big_ivf, tmp_path):
+    from repro import ckpt
+    sh = _sharded_view(big_ivf, 2)
+    path = str(tmp_path / "future_index.ckpt")
+    orig = sh.to_state_dict()
+    sh.to_state_dict = lambda: {**orig, "state_format": 99}
+    ckpt.save_index(path, sh)
+    with pytest.raises(ValueError, match="state format 99"):
+        ckpt.load_index(path, variant=sh.variant)
 
 
 def test_sharded_served_through_anns_server(big_ds, big_ivf):
@@ -319,6 +368,222 @@ def test_sharded_stats_and_family_wiring():
     assert st["n_shards"] == 4 and sum(st["shard_sizes"]) == 500
     assert st["shard_skew"] >= 1.0
     assert st["pad_overhead"] >= 1.0
+
+
+def test_memory_split_total_vs_device(big_ivf):
+    """memory_bytes counts every array once (stacked arrays in full);
+    device_memory_bytes is the replicated state plus ONE shard slice —
+    and post-tentpole it carries no (N, d) fp32 term, so it shrinks as
+    the shard count grows while the ivf single-device footprint doesn't."""
+    from repro.anns.ivf.sharding import shard_memory_bytes
+
+    per_dev = {}
+    for s in (1, 2, 4):
+        sh = _sharded_view(big_ivf, s)
+        idx = sh.index
+        total, device = shard_memory_bytes(idx)
+        assert sh.memory_bytes() == total
+        assert sh.device_memory_bytes() == device
+        stacked = sum(a.size * a.dtype.itemsize for a in (
+            idx.cells, idx.vec_start, idx.base_q, idx.scales, idx.base_f))
+        repl = total - stacked
+        assert device == repl + stacked // s
+        st = sh.stats()
+        assert st["memory_bytes"] == total
+        assert st["device_memory_bytes"] == device
+        per_dev[s] = device
+        # the stacked arrays include the fp32 rerank slices and nothing
+        # replicated is (N, d) fp32: worst-device footprint must beat the
+        # unsharded ivf backend once the base is actually split
+        if s > 1:
+            assert device < big_ivf.memory_bytes()
+    assert per_dev[4] < per_dev[2] < per_dev[1]
+
+
+def test_curve_point_carries_device_memory(big_ds, big_ivf):
+    from repro.anns.bench import measure_point
+    sh = _sharded_view(big_ivf, 4)
+    pt = measure_point(sh, big_ds, params=SearchParams(k=10, ef=64),
+                       repeats=1)
+    assert pt.memory_bytes == sh.memory_bytes()
+    assert pt.device_memory_bytes == sh.device_memory_bytes()
+    assert pt.device_memory_bytes < pt.memory_bytes
+    pt_ivf = measure_point(big_ivf, big_ds,
+                           params=SearchParams(k=10, ef=64), repeats=1)
+    # single-device backends: worst device == total
+    assert pt_ivf.device_memory_bytes == pt_ivf.memory_bytes
+
+
+# ---------------------------------------------------------------------------
+# empty-shard / degenerate-layout edge cases
+# ---------------------------------------------------------------------------
+
+@given(n_examples=10, seed=16,
+       n_cells=sampled_from((1, 3, 8)),
+       n_shards=sampled_from((1, 2, 8, 16)),
+       zero_frac=sampled_from((0.0, 0.5, 1.0)))
+def test_balanced_cell_ranges_degenerate(n_cells, n_shards, zero_frac):
+    """Bounds stay monotone and covering when shards outnumber non-empty
+    cells — including the all-empty layout (total count 0)."""
+    rng = np.random.default_rng(n_cells * 131 + n_shards)
+    counts = rng.integers(1, 20, size=n_cells)
+    counts[rng.random(n_cells) < zero_frac] = 0
+    cb = balanced_cell_ranges(counts, n_shards)
+    assert cb[0] == 0 and cb[-1] == n_cells
+    assert (np.diff(cb) >= 0).all()
+    assert len(cb) == n_shards + 1
+    # vector conservation: shard ranges partition the cells, so per-shard
+    # vector counts sum to the total
+    assert sum(int(counts[cb[j]:cb[j + 1]].sum())
+               for j in range(n_shards)) == int(counts.sum())
+
+
+@given(n_examples=6, seed=17,
+       data_seed=integers(0, 10_000),
+       n=sampled_from((40, 96)),
+       n_shards=sampled_from((8, 16)))
+def test_more_shards_than_cells_matches_ivf(data_seed, n, n_shards):
+    """n_shards beyond the cell count leaves zero-width shards; the scan/
+    rerank body must stay safe (all-masked blocks) and the merged answer
+    must still equal ivf exactly at max nprobe, with every id conserved."""
+    x = _blobs(data_seed, n, 16)
+    ivf, sh = _ivf_and_sharded(x, nlist=4, n_shards=n_shards,
+                               seed=data_seed % 5)
+    idx = sh.index
+    assert idx.n_shards == n_shards
+    assert (np.diff(idx.cell_bounds) == 0).any()      # zero-width shards
+    # id conservation across the sliced layout
+    assert sum(int(d) for d in np.diff(idx.vec_bounds)) == n
+    assert sorted(np.asarray(idx.ids).tolist()) == list(range(n))
+    p = SearchParams(k=10, ef=64 * ivf.index.nlist, rerank_factor=4)
+    a, b = ivf.search(x[:8], p), sh.search(x[:8], p)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+def test_empty_shards_stats_and_memory_are_finite():
+    x = _blobs(5, 32, 8)
+    v = dataclasses.replace(SHARDED_BASELINE, nlist=2, kmeans_iters=1,
+                            n_shards=8)
+    sh = registry.create("sharded", v)
+    sh.build(x)
+    st = sh.stats()
+    assert st["n_shards"] == 8 and sum(st["shard_sizes"]) == 32
+    assert np.isfinite(st["shard_skew"])
+    assert 0 < sh.device_memory_bytes() <= sh.memory_bytes()
+
+
+# ---------------------------------------------------------------------------
+# serve driver: --load-index / --n-shards conflict note (regression)
+# ---------------------------------------------------------------------------
+
+def test_shard_conflict_note_every_backend(big_ivf):
+    """The old check did getattr(target.index, 'n_shards', args.n_shards):
+    backends whose built state has no n_shards (graph, brute_force, ivf)
+    either crashed or silently masked the mismatch.  The note must be
+    correct for every shape of restored target."""
+    from repro.launch.serve import _shard_conflict_note
+
+    sh = _sharded_view(big_ivf, 2)
+    assert _shard_conflict_note(sh, None) is None
+    assert _shard_conflict_note(sh, 0) is None
+    assert _shard_conflict_note(sh, 2) is None          # matching count
+    note = _shard_conflict_note(sh, 4)
+    assert note and "build identity" in note and "n_shards=2" in note
+
+    # ivf: built state, no shard axis
+    note = _shard_conflict_note(big_ivf, 4)
+    assert note and "no shard axis" in note and "'ivf'" in note
+
+    # graph-like: a backend whose .index lacks n_shards entirely
+    class GraphLike:
+        name = "graph"
+        index = object()
+    note = _shard_conflict_note(GraphLike(), 4)
+    assert note and "no shard axis" in note
+
+    # pathological: no .index attribute at all — must not AttributeError
+    class Bare:
+        name = "weird"
+    note = _shard_conflict_note(Bare(), 4)
+    assert note and "no shard axis" in note
+
+
+def test_serve_load_graph_index_with_n_shards_subprocess(tmp_path):
+    """End-to-end regression: restoring a non-sharded checkpoint with
+    --n-shards set must warn and serve, not crash."""
+    from repro import ckpt
+    from repro.anns import make_dataset
+    from repro.anns.engine import GLASS_BASELINE
+
+    ds = make_dataset("sift-128-euclidean", n_base=300, n_query=8)
+    g = registry.create("graph", GLASS_BASELINE, metric=ds.metric)
+    g.build(ds.base)
+    path = str(tmp_path / "graph_index.ckpt")
+    ckpt.save_index(path, g)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--load-index", path, "--n-shards", "4",
+         "--n-base", "300", "--n-query", "8", "--n-requests", "8"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "no shard axis" in r.stdout
+    assert "served 8 requests" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# HLO-level merge traffic bound (the regression the tentpole prevents)
+# ---------------------------------------------------------------------------
+
+def test_merge_collective_bytes_bounded_subprocess():
+    """Under a forced-host 8-device mesh, one placed sharded search must
+    move O(S*B*m) merge traffic — identical across dataset sizes — and
+    never an O(N*d) broadcast.  Pre-tentpole, the partitioner gathered
+    the whole (S, B, nprobe*pad) scan block (traffic grew with N)."""
+    script = """
+import dataclasses, numpy as np, jax
+from repro.anns import SearchParams, registry
+from repro.anns.engine import SHARDED_BASELINE
+from repro.dist.hlo import collective_bytes
+from repro.launch.mesh import make_shard_mesh
+
+assert jax.device_count() == 8, jax.devices()
+rng = np.random.default_rng(0)
+S, B, d, k = 8, 8, 32, 10
+totals = {}
+for N in (2000, 4000):
+    x = rng.standard_normal((N, d)).astype(np.float32)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    v = dataclasses.replace(SHARDED_BASELINE, nlist=32, kmeans_iters=2,
+                            n_shards=S, rerank_factor=4)
+    sh = registry.create("sharded", v)
+    sh.build(x)
+    sh.place_on_mesh(make_shard_mesh(S))
+    # the tentpole's layout claim: no replicated (N, d) fp32 leaf exists
+    assert not hasattr(sh.index, "base")
+    assert len(sh.index.base_f.sharding.device_set) == S
+    p = SearchParams(k=k, ef=64)
+    cb = collective_bytes(sh.lower_search(q, p).compile().as_text())
+    m = 4 * k                               # rerank_factor * k shortlist
+    shortlist = S * B * m * (4 + 4 + 4 + 1)   # gpos + sd + rd + valid
+    assert cb["total_bytes"] < 4 * shortlist + 4096, (N, cb)
+    assert cb["total_bytes"] < N * d * 4, (N, cb)   # never an (N, d) move
+    for op, v_ in cb.items():
+        if isinstance(v_, dict):
+            assert v_["bytes"] < N * d * 4, (op, v_)
+    totals[N] = cb["total_bytes"]
+    print(N, cb["total_bytes"])
+assert totals[2000] == totals[4000], totals   # traffic independent of N
+print('OK')
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
 
 
 def test_sharded_on_device_mesh_subprocess():
