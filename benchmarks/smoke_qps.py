@@ -7,6 +7,12 @@ regressions in either axis show up as a diff between artifacts rather
 than an anecdote.  Sized for CI wall-clock, not statistical rigor —
 ``benchmarks/table3_qps_recall.py`` is the real harness.
 
+Alongside the raw curves, the same built backends are swept through
+``repro.anns.tune.sweep_frontier`` into ``BENCH_frontier_smoke.json`` —
+the *operating points* the autotuner would pick from, so the perf
+trajectory records the Pareto frontier (and its pruning), not only raw
+curve samples.
+
     PYTHONPATH=src python benchmarks/smoke_qps.py --out .
 """
 from __future__ import annotations
@@ -38,11 +44,13 @@ def run(out_dir: str = ".", n_base: int = 2000, n_query: int = 32,
         "unix_time": time.time(),
         "curves": {},
     }
+    built = []
     for backend in backends:
         v = dataclasses.replace(family_baseline(backend),
                                 nlist=32, kmeans_iters=2)
         b = registry.create(backend, v, metric=ds.metric)
         build_s = build_timed(b, ds.base)
+        built.append(b)
         pts = qps_recall_curve(b, ds, ef_sweep=(16, 64, 128),
                                repeats=repeats,
                                base_params=SearchParams(k=10),
@@ -56,6 +64,18 @@ def run(out_dir: str = ".", n_base: int = 2000, n_query: int = 32,
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {path}")
+
+    # operating-point record: the already-built backends swept along
+    # their full effort ladders, pruned to the Pareto set — what `serve
+    # --load-frontier` / `choose` would actually pick from this commit
+    from repro import ckpt
+    from repro.anns.tune import sweep_frontier
+    frontier = sweep_frontier(ds, backends=(), targets=built,
+                              repeats=repeats, ef_cap=256,
+                              meta={"source": "smoke_qps"})
+    fpath = ckpt.save_frontier(
+        os.path.join(out_dir, "BENCH_frontier_smoke.json"), frontier)
+    print(f"wrote {fpath} ({frontier.describe()})")
     return path
 
 

@@ -44,8 +44,14 @@ def _curve(variant, backend, ds, repeats):
 def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                   "glove-25-angular"),
         n_base: int = 5000, n_query: int = 100, repeats: int = 2,
-        backends=("graph",)):
+        backends=("graph",), frontier_out: str | None = None):
+    """``frontier_out`` re-emits the sweep as an operating-point artifact:
+    the same measurements that fill the table, lifted into a pruned
+    ``repro.anns.tune`` frontier JSON (one file per run, first dataset
+    only — frontiers are per-dataset objects) that ``serve
+    --load-frontier`` and the RL baseline bank consume directly."""
     rows = []
+    frontier_points = []
     for name in datasets:
         ds = make_dataset(name, n_base=n_base, n_query=n_query)
         for backend in backends:
@@ -68,11 +74,25 @@ def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                     f"build_s={pt.build_seconds:.2f};"
                     f"mem_mb={pt.memory_bytes/1e6:.1f};"
                     f"dev_mem_mb={pt.device_memory_bytes/1e6:.1f}"))
+                if frontier_out and name == datasets[0]:
+                    from repro.anns.tune import OperatingPoint
+                    frontier_points.append(OperatingPoint(
+                        backend=backend, params=SearchParams(k=10),
+                        recall=1.0, qps=pt.qps, p50_ms=pt.p50_ms,
+                        build_seconds=pt.build_seconds,
+                        memory_bytes=pt.memory_bytes,
+                        device_memory_bytes=pt.device_memory_bytes,
+                        label="exact"))
                 continue
             curves = {
                 "glass": _curve(GLASS_BASELINE, backend, ds, repeats),
                 "crinn": _curve(CRINN_DISCOVERED, backend, ds, repeats),
             }
+            if frontier_out and name == datasets[0]:
+                from repro.anns.tune import frontier_from_curve
+                for label, curve in curves.items():
+                    frontier_points.extend(frontier_from_curve(
+                        backend, curve, k=10, label=label))
             crinn_pt = curves["crinn"][0]
             for r in RECALL_TARGETS:
                 qb = qps_at_recall(curves["glass"], r)
@@ -95,6 +115,15 @@ def run(datasets=("sift-128-euclidean", "mnist-784-euclidean",
                     f"build_s={crinn_pt.build_seconds:.2f};"
                     f"mem_mb={crinn_pt.memory_bytes/1e6:.1f};"
                     f"dev_mem_mb={crinn_pt.device_memory_bytes/1e6:.1f}"))
+    if frontier_out and frontier_points:
+        from repro import ckpt
+        from repro.anns.tune import frontier_from_points
+        frontier = frontier_from_points(
+            frontier_points, dataset=datasets[0], n_base=n_base,
+            n_query=n_query, k=10,
+            meta={"source": "table3_qps_recall", "repeats": repeats})
+        ckpt.save_frontier(frontier_out, frontier)
+        print(f"# wrote {frontier.describe()} -> {frontier_out}")
     return rows
 
 
@@ -106,6 +135,10 @@ if __name__ == "__main__":
     ap.add_argument("--n-base", type=int, default=5000)
     ap.add_argument("--n-query", type=int, default=100)
     ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--frontier-out", metavar="FILE", default=None,
+                    help="also emit the first dataset's sweep as a pruned "
+                         "repro.anns.tune frontier JSON (serve "
+                         "--load-frontier consumes it)")
     args = ap.parse_args()
     from repro.anns.registry import list_backends
     if args.backends.strip() == "all":
@@ -118,4 +151,4 @@ if __name__ == "__main__":
             ap.error(f"unknown backend {b!r}; registered: "
                      f"{list_backends()}")
     run(n_base=args.n_base, n_query=args.n_query, repeats=args.repeats,
-        backends=backends)
+        backends=backends, frontier_out=args.frontier_out)

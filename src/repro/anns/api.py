@@ -69,6 +69,29 @@ def round_steps(steps: int) -> int:
     return snap_to_ladder(steps, STEP_LADDER, 256)
 
 
+def search_ef_ladder(backend, *, ef_cap: int | None = None) -> tuple:
+    """The ef values worth sweeping for ``backend`` — its static effort
+    ladder, introspected.
+
+    Backends expose a ``search_ef_ladder()`` method when the universal
+    ``ef`` knob maps onto a family-specific ladder (the IVF family maps
+    ef onto ``NPROBE_LADDER`` rungs; brute force is effort-free and
+    returns a single point); graph-family backends default to
+    :data:`EF_LADDER`.  The autotuner sweeps exactly this set, so every
+    frontier point sits on a rung an already-compiled trace serves —
+    choosing from a frontier never introduces a new jit retrace bucket.
+
+    ``ef_cap`` trims the top of the ladder (sweep wall-clock control);
+    at least one rung always survives.
+    """
+    fn = getattr(backend, "search_ef_ladder", None)
+    ladder = tuple(fn()) if callable(fn) else EF_LADDER
+    if ef_cap is not None:
+        capped = tuple(e for e in ladder if e <= ef_cap)
+        ladder = capped or ladder[:1]
+    return ladder
+
+
 # ---------------------------------------------------------------------------
 # parameter / result structs
 # ---------------------------------------------------------------------------

@@ -40,6 +40,12 @@ class BruteForceBackend:
         self.index = jnp.asarray(base, jnp.float32)
         return self.index
 
+    @staticmethod
+    def search_ef_ladder() -> tuple:
+        """Exact search has no effort knob: one rung, recall 1.0 — the
+        anchor point the autotuner sweeps exactly once."""
+        return (64,)
+
     def search(self, queries, params: SearchParams) -> SearchResult:
         assert self.index is not None, "build() first"
         base = self.index

@@ -54,6 +54,18 @@ def nprobe_for(variant, params: SearchParams, nlist: int) -> int:
     return min(round_nprobe(raw), nlist)
 
 
+def ef_ladder_for_nprobe(variant, nlist: int) -> tuple:
+    """The ef values whose :func:`nprobe_for` mapping lands on each
+    reachable ``NPROBE_LADDER`` rung (plus the all-cells probe when
+    ``nlist`` is off-ladder) — the IVF family's answer to
+    :func:`repro.anns.api.search_ef_ladder`.  Sweeping exactly these efs
+    walks the whole nprobe ladder once, with no two efs landing on the
+    same rung's trace."""
+    base = max(1, int(variant.nprobe))
+    rungs = [r for r in NPROBE_LADDER if r < nlist] + [int(nlist)]
+    return tuple(sorted({max(1, round(64 * r / base)) for r in rungs}))
+
+
 def shortlist_width(params: SearchParams, k: int, n: int, nprobe: int,
                     cell_pad: int) -> int:
     """Rerank shortlist width m: ``rerank_factor * k`` capped by the base
@@ -129,6 +141,14 @@ class IvfBackend:
 
     def _nprobe_for(self, params: SearchParams) -> int:
         return nprobe_for(self.variant, params, self.index.nlist)
+
+    def search_ef_ladder(self) -> tuple:
+        """Effort ladder for the autotuner: efs covering every nprobe
+        rung (built ``nlist`` when available — ``max_cell`` splits can
+        grow it past the variant's)."""
+        nlist = self.index.nlist if self.index is not None \
+            else self.variant.nlist
+        return ef_ladder_for_nprobe(self.variant, nlist)
 
     def search(self, queries, params: SearchParams) -> SearchResult:
         assert self.index is not None, "build() first"

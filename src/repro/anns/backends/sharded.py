@@ -249,6 +249,15 @@ class ShardedBackend:
         assert self.index is not None, "build() first"
         return sharded_stats(self.index)
 
+    def search_ef_ladder(self) -> tuple:
+        """Same effort ladder as the unsharded ivf backend (shared
+        nprobe mapping is the basis of their equivalence), from the
+        built global cell count when available."""
+        from repro.anns.backends.ivf import ef_ladder_for_nprobe
+        nlist = self.index.nlist if self.index is not None \
+            else self.variant.nlist
+        return ef_ladder_for_nprobe(self.variant, nlist)
+
     def _invocation(self, queries, params: SearchParams):
         """Resolve one search call to (positional arrays, static knobs) —
         shared by :meth:`search` and :meth:`lower_search` so HLO-level

@@ -107,6 +107,16 @@ def measure_point(target, ds: Dataset, *, params: SearchParams | None = None,
                       memory_bytes=mem, device_memory_bytes=dev)
 
 
+def sweep_params(base: SearchParams, ef: int) -> SearchParams:
+    """The exact params one rung of an ef sweep measures: ``ef`` plus the
+    high-recall mode switch (adaptive-EF variants engage above ef=96).
+    Shared with the autotuner so a frontier's stored
+    :class:`~repro.anns.api.SearchParams` reproduce the measured point
+    bit-for-bit when a server replays them."""
+    tr = 0.95 if ef >= 96 else 0.0
+    return dataclasses.replace(base, ef=ef, target_recall=tr)
+
+
 def qps_recall_curve(target, ds: Dataset, *, k: int | None = None,
                      ef_sweep=DEFAULT_EF_SWEEP, repeats: int = 3,
                      base_params: SearchParams | None = None,
@@ -117,16 +127,46 @@ def qps_recall_curve(target, ds: Dataset, *, k: int | None = None,
     if base_params is not None and k is not None:
         raise ValueError("pass either base_params or k, not both")
     base = base_params or SearchParams(k=k if k is not None else 10)
-    pts = []
-    for ef in ef_sweep:
-        tr = 0.95 if ef >= 96 else 0.0   # adaptive-EF variants engage high-recall mode
-        p = dataclasses.replace(base, ef=ef, target_recall=tr)
-        pts.append(measure_point(target, ds, params=p, repeats=repeats,
-                                 build_seconds=build_seconds))
-    return pts
+    return [measure_point(target, ds, params=sweep_params(base, ef),
+                          repeats=repeats, build_seconds=build_seconds)
+            for ef in ef_sweep]
+
+
+@dataclass(frozen=True)
+class QpsAtRecall:
+    """Typed answer to "best QPS meeting a recall target": distinguishes
+    *infeasible* (points exist, none reach the target — ``feasible`` is
+    False) from *no data* (callers reaching this struct always measured
+    something; the empty-input case raises instead)."""
+    qps: float | None      # best QPS among qualifying points, None if none
+    feasible: bool         # did any point reach the target?
+    best_recall: float     # highest recall observed (relax the target to this)
+    n_points: int          # points examined
+
+    def __bool__(self) -> bool:
+        return self.feasible
+
+
+def qps_at_recall_result(points: list[CurvePoint],
+                         recall: float) -> QpsAtRecall:
+    """Best QPS among points meeting the recall target, as a typed
+    :class:`QpsAtRecall`.  Raises ``ValueError`` on an empty sweep —
+    "never measured" must not be confusable with "measured, infeasible"
+    (the bug the old ``None``-for-both return hid)."""
+    if not points:
+        raise ValueError(
+            "qps_at_recall on an empty point list: nothing was measured "
+            "(an infeasible target returns feasible=False instead)")
+    ok = [p.qps for p in points if p.recall >= recall]
+    return QpsAtRecall(qps=max(ok) if ok else None, feasible=bool(ok),
+                       best_recall=max(p.recall for p in points),
+                       n_points=len(points))
 
 
 def qps_at_recall(points: list[CurvePoint], recall: float) -> float | None:
-    """Best QPS among points meeting the recall target (paper Table 3)."""
-    ok = [p.qps for p in points if p.recall >= recall]
-    return max(ok) if ok else None
+    """Best QPS among points meeting the recall target (paper Table 3).
+
+    Compatibility wrapper over :func:`qps_at_recall_result`: ``None``
+    now means exactly "measured but infeasible" — the empty-input case
+    raises there instead of aliasing with infeasibility."""
+    return qps_at_recall_result(points, recall).qps

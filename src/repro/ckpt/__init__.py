@@ -1,6 +1,7 @@
 from repro.ckpt.checkpoint import save_checkpoint, load_checkpoint
+from repro.ckpt.frontier_io import load_frontier, save_frontier
 from repro.ckpt.index_io import load_index, save_index
 from repro.ckpt.manager import CheckpointManager
 
 __all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
-           "save_index", "load_index"]
+           "save_index", "load_index", "save_frontier", "load_frontier"]

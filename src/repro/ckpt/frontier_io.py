@@ -1,0 +1,53 @@
+"""Ship swept Pareto frontiers as versioned JSON artifacts.
+
+A frontier is to the autotuner what a built index is to the backend:
+expensive to produce (a full ladder sweep), cheap to query, and exactly
+what a serving host should receive instead of a recipe — ``serve
+--save-frontier``/``--load-frontier`` mirror ``--save-index``/
+``--load-index``.  JSON (not the binary shard format) because frontiers
+are small (tens of points), human-diffable in CI artifacts, and have no
+array leaves.
+
+Versioning follows the index-checkpoint convention: the payload stamps
+``frontier_format`` (:data:`repro.anns.tune.frontier.FRONTIER_FORMAT`)
+and :func:`load_frontier` fails fast on anything newer.  Writes are
+atomic (tmp + ``os.replace``) and byte-deterministic (sorted keys,
+fixed separators): equal frontiers produce equal files, so CI artifact
+diffs mean something.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def frontier_json(frontier) -> str:
+    """Canonical JSON text for a frontier (sorted keys, stable floats):
+    the byte-stability contract of the golden test."""
+    return json.dumps(frontier.to_json_dict(), sort_keys=True, indent=2)
+
+
+def save_frontier(path: str, frontier) -> str:
+    """Write ``frontier`` to ``path`` atomically; returns ``path``."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(frontier_json(frontier))
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def load_frontier(path: str):
+    """Restore a :class:`repro.anns.tune.frontier.Frontier` from
+    :func:`save_frontier` output.  Raises ``ValueError`` on a payload
+    whose ``frontier_format`` is newer than this tuner understands, and
+    ``KeyError``-ish clarity when the file isn't a frontier at all."""
+    from repro.anns.tune.frontier import Frontier
+
+    with open(path) as f:
+        payload = json.load(f)
+    if not isinstance(payload, dict) or "frontier_format" not in payload:
+        raise ValueError(
+            f"{path!r} is not a frontier artifact (missing "
+            f"'frontier_format'); expected save_frontier output")
+    return Frontier.from_json_dict(payload)

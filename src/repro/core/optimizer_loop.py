@@ -67,7 +67,8 @@ class CrinnOptimizer:
 
     def __init__(self, policy: Policy, ds: Dataset, loop: LoopConfig,
                  gcfg: GRPOConfig | None = None,
-                 opt_cfg: AdamWConfig | None = None):
+                 opt_cfg: AdamWConfig | None = None,
+                 frontier=None):
         self.policy = policy
         self.ds = ds
         self.loop = loop
@@ -83,6 +84,12 @@ class CrinnOptimizer:
         # paper-faithful starting point: GLASS baseline, reward 1.0
         self.current = GLASS_BASELINE
         self.baselines = FamilyBaselines()
+        if frontier is not None:
+            # a swept Pareto frontier (repro.anns.tune / ckpt.load_frontier)
+            # pre-fills the per-family baseline bank, so the first candidate
+            # of a family skips its one-time baseline sweep — the bench
+            # cost moves offline, next to the index build
+            self.baselines.seed_from_frontier(frontier)
         self._jit_update = None
 
     @property

@@ -124,3 +124,38 @@ class FamilyBaselines:
                lo: float = RECALL_LO, hi: float = RECALL_HI) -> RewardResult:
         """Banded-AUC reward for ``points`` against ``family``'s baseline."""
         return speed_reward(points, self.get(family), lo=lo, hi=hi)
+
+    def seed_from_frontier(self, frontier, *, lo: float = RECALL_LO,
+                           hi: float = RECALL_HI,
+                           overwrite: bool = False) -> dict:
+        """Fill the bank from an already-swept Pareto frontier
+        (:mod:`repro.anns.tune`) instead of re-measuring each family's
+        baseline on first contact.
+
+        Each family's banded AUC is integrated over its frontier points
+        (``.backend``/``.recall``/``.qps`` rows — duck-typed, this module
+        stays import-light).  NB this is an approximation of a fresh
+        baseline sweep, not a bit-match: Pareto pruning drops dominated
+        points, and :func:`banded_auc` integrates the piecewise curve
+        through whatever points remain (clamped to their recall range),
+        so a seeded AUC can differ slightly from the full-grid value.
+        The trade is deliberate: a baseline offset scales all of a
+        family's rewards uniformly, preserving the within-family
+        ordering the policy learns from — while the one-time
+        first-contact sweep it replaces costs a full bench run inside
+        the RL loop.  Families absent from the frontier still get the
+        fresh sweep on first contact.  Families already banked are kept
+        unless ``overwrite``; returns the AUCs written.
+        """
+        by_family: dict[str, list] = {}
+        for p in frontier.points:
+            by_family.setdefault(p.backend, []).append(p)
+        written = {}
+        for family, pts in sorted(by_family.items()):
+            if self.has(family) and not overwrite:
+                continue
+            auc, _ = banded_auc(np.array([p.recall for p in pts], float),
+                                np.array([p.qps for p in pts], float),
+                                lo=lo, hi=hi)
+            written[family] = self.set(family, auc)
+        return written

@@ -12,6 +12,17 @@ Built indexes ship without a rebuild: ``--save-index DIR`` checkpoints
 the built state after the build, ``--load-index DIR`` restores it on a
 serving host (skipping the build entirely; the backend comes from the
 checkpoint itself).
+
+Operating points ship the same way (``repro.anns.tune``): ``--tune``
+sweeps the served backend's effort ladder into a Pareto frontier,
+``--save-frontier``/``--load-frontier`` move it as versioned JSON, and
+``--target-recall R`` (optionally ``--memory-budget-mb M``) serves in
+SLO mode — the ``ef`` comes from the frontier's constrained max-QPS
+pick, not from a hand-chosen ``--ef``.  A fleet sweeps once and every
+host loads the artifact:
+
+    serve --backend ivf --tune --save-frontier f.json          # bench host
+    serve --backend ivf --load-frontier f.json --target-recall 0.95
 """
 import argparse
 import time
@@ -77,7 +88,43 @@ def main():
     ap.add_argument("--load-index", metavar="DIR", default=None,
                     help="serve a previously checkpointed index from DIR "
                          "(no rebuild; overrides --backend)")
+    # -- autotuning / SLO mode (repro.anns.tune) -------------------------
+    ap.add_argument("--tune", action="store_true",
+                    help="sweep the served backend's effort ladder into a "
+                         "Pareto frontier before serving")
+    ap.add_argument("--tune-repeats", type=int, default=1,
+                    help="bench repeats per frontier point (sweep cost "
+                         "knob; 1 is fine for operating-point selection)")
+    ap.add_argument("--save-frontier", metavar="FILE", default=None,
+                    help="write the swept/loaded frontier JSON to FILE")
+    ap.add_argument("--load-frontier", metavar="FILE", default=None,
+                    help="reuse a frontier swept elsewhere (no re-sweep; "
+                         "mutually exclusive with --tune)")
+    ap.add_argument("--frontier-label", default=None,
+                    help="restrict a loaded frontier to points with this "
+                         "provenance label (artifacts like table3's mix "
+                         "variants, e.g. 'glass' vs 'crinn'; a pick is "
+                         "only valid for the matching build)")
+    ap.add_argument("--target-recall", type=float, default=None,
+                    help="serve in SLO mode: pick max-QPS params with "
+                         "recall >= this from the frontier instead of --ef")
+    ap.add_argument("--memory-budget-mb", type=float, default=None,
+                    help="SLO memory constraint: the pick's per-device "
+                         "resident bytes must fit this budget")
     args = ap.parse_args()
+
+    if args.tune and args.load_frontier:
+        ap.error("--tune re-sweeps, --load-frontier reuses: pick one")
+    if args.save_frontier and not (args.tune or args.load_frontier):
+        ap.error("--save-frontier needs a frontier (--tune or "
+                 "--load-frontier)")
+    if args.target_recall is not None and not (args.tune
+                                               or args.load_frontier):
+        ap.error("--target-recall is frontier-driven: add --tune (sweep "
+                 "now) or --load-frontier FILE (reuse a sweep)")
+    if args.memory_budget_mb is not None and args.target_recall is None:
+        ap.error("--memory-budget-mb only constrains an SLO pick; add "
+                 "--target-recall")
 
     import dataclasses
 
@@ -131,8 +178,65 @@ def main():
             print(f"placed {ns} cell shards on {ns} devices "
                   f"({target.device_memory_bytes()/1e6:.1f} MB/device)")
 
-    server = AnnsServer(target, max_batch=args.max_batch,
-                        params=SearchParams(k=args.k, ef=args.ef))
+    frontier = None
+    if args.load_frontier:
+        frontier = ckpt.load_frontier(args.load_frontier)
+        print(f"loaded {frontier.describe()} from {args.load_frontier}")
+        if args.frontier_label is not None:
+            pts = tuple(p for p in frontier.points
+                        if p.label == args.frontier_label)
+            if not pts:
+                ap.error(f"frontier has no points labeled "
+                         f"{args.frontier_label!r}; labels present: "
+                         f"{sorted({p.label for p in frontier.points})}")
+            frontier = dataclasses.replace(frontier, points=pts)
+        if (frontier.dataset, frontier.n_base) != (args.dataset,
+                                                   args.n_base):
+            print(f"note: frontier was swept on {frontier.dataset} "
+                  f"n_base={frontier.n_base}, serving "
+                  f"{args.dataset} n_base={args.n_base} — its measured "
+                  f"recall/QPS may not transfer")
+    elif args.tune:
+        from repro.anns.tune import sweep_frontier
+        t0 = time.time()
+        frontier = sweep_frontier(ds, backends=(), targets=[target],
+                                  k=args.k, repeats=args.tune_repeats)
+        print(f"swept {frontier.describe()} in {time.time()-t0:.1f}s")
+    if args.save_frontier and frontier is not None:
+        ckpt.save_frontier(args.save_frontier, frontier)
+        print(f"frontier saved to {args.save_frontier}")
+
+    if args.target_recall is not None:
+        from repro.anns.tune import RecallSLO
+        if args.k != frontier.k:
+            # the frontier's recall/QPS were measured at its own k; serving
+            # a different k would silently invalidate the SLO (and the
+            # recall report, which divides by args.k)
+            ap.error(f"frontier operating points were swept at "
+                     f"k={frontier.k}; serve with --k {frontier.k} or "
+                     f"re-sweep with --tune")
+        budget = (None if args.memory_budget_mb is None
+                  else int(args.memory_budget_mb * 1e6))
+        slo = RecallSLO(args.target_recall, memory_budget_bytes=budget)
+        labels = {p.label for p in
+                  frontier.for_backend(getattr(target, "name", ""))}
+        if len(labels) > 1:
+            # e.g. a table3 artifact: glass and crinn curves share a
+            # backend name, but a point's measured recall only holds on
+            # the variant it was swept with
+            print(f"note: frontier mixes variant labels {sorted(labels)} "
+                  f"for this backend — the pick's swept recall assumes "
+                  f"the matching build; restrict with --frontier-label")
+        server = AnnsServer(target, max_batch=args.max_batch,
+                            slo=slo, frontier=frontier)
+        op = server.operating_point
+        print(f"slo pick [{slo.describe()}]: backend={op.backend} "
+              f"ef={server.params.ef} k={server.params.k} "
+              f"(swept recall={op.recall:.3f} qps={op.qps:.0f} "
+              f"dev_mem_mb={op.device_memory_bytes/1e6:.1f})")
+    else:
+        server = AnnsServer(target, max_batch=args.max_batch,
+                            params=SearchParams(k=args.k, ef=args.ef))
     rng = np.random.default_rng(0)
     order = rng.integers(0, len(ds.queries), size=args.n_requests)
     t0 = time.time()

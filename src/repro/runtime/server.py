@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.anns.api import SearchParams, round_ef
+from repro.anns.api import SearchParams, round_ef, search_ef_ladder
 from repro.anns.engine import Engine
 
 
@@ -36,14 +36,63 @@ class AnnsResponse:
 
 
 class AnnsServer:
+    """Dynamic-batching ANNS front.
+
+    Two ways to fix the operating point:
+
+    - **hand-picked** — pass ``params`` (or legacy ``ef``/``k``), the
+      operator owns the recall/speed trade.
+    - **SLO mode** — pass ``slo=RecallSLO(...)`` plus a swept
+      ``frontier`` (:mod:`repro.anns.tune`): the server solves max-QPS
+      s.t. the SLO *for the backend it actually holds* and serves at
+      that pick, with ``ef`` re-snapped onto the backend's static ladder
+      (:func:`repro.anns.api.search_ef_ladder` membership, else
+      :func:`~repro.anns.api.round_ef`) so SLO serving never creates a
+      jit retrace bucket the sweep didn't already compile.  An
+      infeasible SLO raises at construction — a server that cannot hold
+      its recall target must not come up quietly.  The resolved pick is
+      kept on ``self.operating_point`` (expected recall/QPS telemetry).
+    """
+
     def __init__(self, engine: Engine, *, max_batch: int = 64,
                  ef: int = 64, k: int = 10,
-                 params: SearchParams | None = None):
+                 params: SearchParams | None = None,
+                 slo=None, frontier=None):
         self.engine = engine
         self.max_batch = max_batch
-        self.params = params or SearchParams(k=k, ef=ef)
+        self.slo = slo
+        self.operating_point = None
+        if slo is not None:
+            if params is not None:
+                raise ValueError(
+                    "pass either slo (frontier-driven params) or explicit "
+                    "params, not both")
+            if frontier is None:
+                raise ValueError(
+                    "slo mode needs a swept frontier (repro.anns.tune."
+                    "sweep_frontier / ckpt.load_frontier) to choose from")
+            self.operating_point = self._pick(slo, frontier)
+            self.params = self.operating_point.params
+        else:
+            self.params = params or SearchParams(k=k, ef=ef)
         self.queue: list[AnnsRequest] = []
         self.served = 0
+
+    def _pick(self, slo, frontier):
+        """Constrained choice restricted to the served backend, ef
+        re-snapped onto its static ladder."""
+        from repro.anns.tune import choose, replace_params
+
+        backend = (self.engine.backend if isinstance(self.engine, Engine)
+                   else self.engine)
+        point = choose(frontier, slo, backend=getattr(backend, "name", None))
+        ef = point.params.ef
+        if ef not in search_ef_ladder(backend):
+            # off-ladder ef (e.g. a frontier swept by an older ladder):
+            # snap up — a wider beam can only help recall, and the rung
+            # is a trace the server would compile anyway
+            point = replace_params(point, ef=round_ef(ef))
+        return point
 
     # legacy attribute views of the typed params
     @property

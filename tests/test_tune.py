@@ -1,0 +1,532 @@
+"""SLO autotuner tests: frontier math, golden stability, serving e2e.
+
+Layers:
+
+- **property** (proptest harness): Pareto pruning never keeps a
+  dominated point and never drops one that wasn't (up to exact-axis
+  duplicates); ``choose`` is monotone in the SLO (raising the recall
+  target never raises the returned QPS) and honors a memory budget
+  absolutely; infeasible SLOs raise :class:`InfeasibleSLO` instead of
+  silently degrading.
+- **golden** — a sweep on the deterministic seed dataset (real build +
+  real search, injected deterministic timing) is byte-stable across
+  runs; ``choose`` on the checked-in ``tests/fixtures/frontier_small.json``
+  returns pinned picks, so a ladder / telemetry field rename breaks CI
+  here first.
+- **edge behavior** — ``qps_at_recall`` now separates "measured but
+  infeasible" (typed result, ``feasible=False``) from "never measured"
+  (raises); boundary recalls (exactly-at-target, all-above, all-below).
+- **acceptance** — ``AnnsServer`` under ``RecallSLO(0.9)`` on the seed
+  dataset serves with measured recall >= 0.9 at strictly higher QPS
+  than the most conservative ladder rung, and the frontier JSON
+  round-trips through save/load.
+- **e2e subprocess** — ``serve --tune --save-frontier`` then
+  ``serve --load-frontier --target-recall 0.9`` on a fresh process pair:
+  the served params match the in-process ``choose`` pick.
+"""
+import dataclasses
+import json
+import os
+import re
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from proptest import floats, given, integers
+from repro.anns import SearchParams, make_dataset, registry
+from repro.anns.api import EF_LADDER, search_ef_ladder
+from repro.anns.bench import (CurvePoint, qps_at_recall,
+                              qps_at_recall_result)
+from repro.anns.engine import IVF_BASELINE
+from repro.anns.tune import (FRONTIER_FORMAT, Frontier, InfeasibleSLO,
+                             OperatingPoint, RecallSLO, choose, dominates,
+                             frontier_from_points, pareto_prune,
+                             sweep_frontier, sweep_target)
+from repro.ckpt.frontier_io import frontier_json, load_frontier, save_frontier
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "frontier_small.json")
+
+
+def _op(backend="ivf", ef=64, recall=0.9, qps=1000.0, mem=1000,
+        label="") -> OperatingPoint:
+    return OperatingPoint(backend=backend, params=SearchParams(k=10, ef=ef),
+                          recall=recall, qps=qps, p50_ms=1.0,
+                          memory_bytes=mem, device_memory_bytes=mem,
+                          label=label)
+
+
+def _random_points(rng_seed: int, n: int) -> list:
+    rng = np.random.default_rng(rng_seed)
+    pts = []
+    for i in range(n):
+        pts.append(_op(backend=("ivf", "graph")[int(rng.integers(2))],
+                       ef=int(EF_LADDER[int(rng.integers(len(EF_LADDER)))]),
+                       recall=float(np.round(rng.random(), 3)),
+                       qps=float(np.round(1 + 5000 * rng.random(), 3)),
+                       mem=int(rng.integers(1, 50)) * 1000))
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# property: Pareto pruning
+# ---------------------------------------------------------------------------
+
+@given(n_examples=25, seed=21, rng_seed=integers(0, 10_000),
+       n=integers(1, 40))
+def test_pareto_prune_keeps_no_dominated_point(rng_seed, n):
+    pts = _random_points(rng_seed, n)
+    kept = pareto_prune(pts)
+    assert kept, "non-empty input must keep at least one point"
+    for p in kept:
+        assert not any(dominates(q, p) for q in pts), p
+
+
+@given(n_examples=25, seed=22, rng_seed=integers(0, 10_000),
+       n=integers(1, 40))
+def test_pareto_prune_drops_only_dominated_points(rng_seed, n):
+    """Completeness: a dropped point is dominated by (or an exact-axis
+    duplicate of) a kept one — pruning never loses frontier coverage."""
+    pts = _random_points(rng_seed, n)
+    kept = pareto_prune(pts)
+    axes = [(p.recall, p.qps, p.device_memory_bytes) for p in kept]
+    for p in pts:
+        if p in kept:
+            continue
+        assert (any(dominates(q, p) for q in kept)
+                or (p.recall, p.qps, p.device_memory_bytes) in axes), p
+
+
+@given(n_examples=15, seed=23, rng_seed=integers(0, 10_000))
+def test_pareto_prune_is_idempotent(rng_seed):
+    pts = _random_points(rng_seed, 25)
+    once = pareto_prune(pts)
+    assert pareto_prune(once) == once
+
+
+def test_pareto_prune_memory_axis_saves_small_points():
+    """A slower, no-more-accurate point must survive when it is the only
+    one fitting a small device — the reason domination is 3-axis."""
+    big = _op(ef=64, recall=0.95, qps=2000, mem=100_000)
+    small = _op(ef=32, recall=0.90, qps=1000, mem=10_000)
+    kept = pareto_prune([big, small])
+    assert small in kept and big in kept
+    # and with equal memory the same point IS dominated
+    small_same_mem = dataclasses.replace(small, memory_bytes=100_000,
+                                         device_memory_bytes=100_000)
+    assert small_same_mem not in pareto_prune([big, small_same_mem])
+
+
+# ---------------------------------------------------------------------------
+# property: choose
+# ---------------------------------------------------------------------------
+
+def _frontier_of(pts) -> Frontier:
+    return frontier_from_points(pts, dataset="sift-128-euclidean",
+                                n_base=1000, n_query=10, k=10)
+
+
+@given(n_examples=25, seed=24, rng_seed=integers(0, 10_000),
+       t1=floats(0.0, 1.0), t2=floats(0.0, 1.0))
+def test_choose_monotone_in_recall_target(rng_seed, t1, t2):
+    """Raising the recall target never raises the returned QPS."""
+    f = _frontier_of(_random_points(rng_seed, 20))
+    lo, hi = min(t1, t2), max(t1, t2)
+    try:
+        pick_hi = choose(f, RecallSLO(hi))
+    except InfeasibleSLO:
+        return              # hi infeasible says nothing about monotonicity
+    pick_lo = choose(f, RecallSLO(lo))   # lo <= hi feasible => lo feasible
+    assert pick_lo.qps >= pick_hi.qps
+
+
+@given(n_examples=25, seed=25, rng_seed=integers(0, 10_000),
+       budget=integers(1, 60))
+def test_choose_never_exceeds_memory_budget(rng_seed, budget):
+    f = _frontier_of(_random_points(rng_seed, 20))
+    slo = RecallSLO(0.0, memory_budget_bytes=budget * 1000)
+    try:
+        pick = choose(f, slo)
+    except InfeasibleSLO as e:
+        assert all(p.device_memory_bytes > slo.memory_budget_bytes
+                   for p in f.points)
+        assert e.best_recall == 0.0
+        return
+    assert pick.device_memory_bytes <= slo.memory_budget_bytes
+    ok = [p for p in f.points
+          if p.device_memory_bytes <= slo.memory_budget_bytes]
+    assert pick.qps == max(p.qps for p in ok)
+
+
+@given(n_examples=20, seed=26, rng_seed=integers(0, 10_000))
+def test_choose_infeasible_raises_with_diagnostics(rng_seed):
+    f = _frontier_of(_random_points(rng_seed, 15))
+    best = f.max_recall()
+    with pytest.raises(InfeasibleSLO) as ei:
+        choose(f, RecallSLO(min(1.0, best + 1e-6)))
+    assert ei.value.best_recall == pytest.approx(best)
+
+
+def test_choose_on_empty_frontier_raises():
+    with pytest.raises(InfeasibleSLO, match="nothing was swept"):
+        choose(Frontier(), RecallSLO(0.5))
+    f = _frontier_of([_op(backend="ivf")])
+    with pytest.raises(InfeasibleSLO, match="backend 'graph'"):
+        choose(f, RecallSLO(0.5), backend="graph")
+
+
+def test_recall_slo_validates():
+    with pytest.raises(ValueError):
+        RecallSLO(1.5)
+    with pytest.raises(ValueError):
+        RecallSLO(0.9, memory_budget_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# golden: fixture picks + byte stability + format versioning
+# ---------------------------------------------------------------------------
+
+def test_fixture_frontier_pins_choose_picks():
+    """The checked-in fixture pins the JSON schema AND the solver: a
+    renamed params/telemetry field or a changed tie-break lands here."""
+    f = load_frontier(FIXTURE)
+    assert f.backends() == ("graph", "ivf")
+    assert len(f.points) == 5
+    # pruning is stable: the fixture is already Pareto-optimal
+    assert pareto_prune(f.points) == f.points
+
+    pick = choose(f, RecallSLO(0.90))
+    assert (pick.backend, pick.params.ef, pick.qps) == ("ivf", 16, 4000.0)
+    assert pick.params == SearchParams(k=10, ef=16)
+
+    pick = choose(f, RecallSLO(0.95))
+    assert (pick.backend, pick.params.ef) == ("graph", 128)
+    assert pick.params.target_recall == 0.95     # high-recall mode rode along
+
+    # the memory budget flips the 0.95 pick to the small family
+    pick = choose(f, RecallSLO(0.95, memory_budget_bytes=1_500_000))
+    assert (pick.backend, pick.params.ef) == ("ivf", 64)
+
+    # backend restriction (what AnnsServer does)
+    pick = choose(f, RecallSLO(0.90), backend="graph")
+    assert (pick.backend, pick.params.ef) == ("graph", 64)
+
+    with pytest.raises(InfeasibleSLO, match="infeasible"):
+        choose(f, RecallSLO(0.99))
+    with pytest.raises(InfeasibleSLO):
+        choose(f, RecallSLO(0.90, memory_budget_bytes=500_000))
+
+
+def test_fixture_roundtrips_byte_identical(tmp_path):
+    f = load_frontier(FIXTURE)
+    out = str(tmp_path / "rt.json")
+    save_frontier(out, f)
+    with open(FIXTURE) as a, open(out) as b:
+        assert json.load(a) == json.load(b)
+    # canonical text form is stable under repeated serialization
+    assert frontier_json(f) == frontier_json(load_frontier(out))
+
+
+def test_load_frontier_rejects_future_format(tmp_path):
+    payload = json.load(open(FIXTURE))
+    payload["frontier_format"] = FRONTIER_FORMAT + 1
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="newer"):
+        load_frontier(str(p))
+    notf = tmp_path / "notf.json"
+    notf.write_text(json.dumps({"hello": 1}))
+    with pytest.raises(ValueError, match="not a frontier"):
+        load_frontier(str(notf))
+
+
+def _deterministic_measure(target, ds, params, repeats, build_seconds):
+    """Real (deterministic) search for recall, synthetic timing: the
+    wall clock is the only nondeterministic input to a sweep."""
+    from repro.anns.bench import CurvePoint
+    from repro.anns.datasets import recall_at_k
+    res = target.search(ds.queries, params)
+    rec = recall_at_k(np.asarray(res.ids), ds.gt, params.k)
+    t = (params.ef * 7 + 13) * 1e-6      # fake seconds/query, ef-monotone
+    return CurvePoint(ef=params.ef, qps=1.0 / t, recall=rec,
+                      p50_ms=1e3 * t, backend=target.name,
+                      build_seconds=build_seconds,
+                      memory_bytes=target.memory_bytes(),
+                      device_memory_bytes=target.memory_bytes())
+
+
+def test_sweep_frontier_byte_stable_across_runs():
+    """Same seeds, same dataset, deterministic timing => the frontier
+    JSON text is identical across independent sweeps (build included)."""
+    ds = make_dataset("sift-128-euclidean", n_base=400, n_query=16)
+    texts = []
+    for _ in range(2):
+        v = dataclasses.replace(IVF_BASELINE, nlist=16, kmeans_iters=2)
+        b = registry.create("ivf", v, metric=ds.metric, seed=0)
+        b.build(ds.base)
+        f = sweep_frontier(ds, backends=(), targets=[b], k=10,
+                           measure_fn=_deterministic_measure)
+        texts.append(frontier_json(f))
+    assert texts[0] == texts[1]
+    assert json.loads(texts[0])["frontier_format"] == FRONTIER_FORMAT
+
+
+# ---------------------------------------------------------------------------
+# qps_at_recall edge behavior
+# ---------------------------------------------------------------------------
+
+def _cp(recall, qps) -> CurvePoint:
+    return CurvePoint(ef=64, qps=qps, recall=recall, p50_ms=1.0)
+
+
+def test_qps_at_recall_empty_raises():
+    with pytest.raises(ValueError, match="empty"):
+        qps_at_recall([], 0.9)
+    with pytest.raises(ValueError, match="empty"):
+        qps_at_recall_result([], 0.9)
+
+
+def test_qps_at_recall_boundaries():
+    pts = [_cp(0.85, 3000.0), _cp(0.90, 2000.0), _cp(0.95, 1000.0)]
+    # exactly-at-target counts (>= semantics)
+    r = qps_at_recall_result(pts, 0.90)
+    assert r.feasible and r.qps == 2000.0 and bool(r)
+    assert qps_at_recall(pts, 0.90) == 2000.0
+    # all above: best QPS overall
+    assert qps_at_recall_result(pts, 0.5).qps == 3000.0
+    # all below: typed infeasible, not confusable with "no data"
+    r = qps_at_recall_result(pts, 0.99)
+    assert not r.feasible and r.qps is None and not bool(r)
+    assert r.best_recall == 0.95 and r.n_points == 3
+    assert qps_at_recall(pts, 0.99) is None
+
+
+# ---------------------------------------------------------------------------
+# ladder introspection
+# ---------------------------------------------------------------------------
+
+def test_search_ef_ladder_families():
+    from repro.anns.backends.ivf import NPROBE_LADDER, nprobe_for
+
+    # graph family: no custom ladder => the universal EF_LADDER
+    g = registry.create("graph")
+    assert search_ef_ladder(g) == EF_LADDER
+    assert search_ef_ladder(g, ef_cap=64) == tuple(
+        e for e in EF_LADDER if e <= 64)
+    # ef_cap below the first rung still leaves one point to sweep
+    assert search_ef_ladder(g, ef_cap=1) == (EF_LADDER[0],)
+
+    # brute force: effort-free, a single anchor rung
+    bf = registry.create("brute_force")
+    assert search_ef_ladder(bf) == (64,)
+
+    # ivf: efs walk the nprobe ladder exactly once each, ending at the
+    # all-cells probe
+    x = np.random.default_rng(0).standard_normal((300, 16)).astype(np.float32)
+    b = registry.create("ivf", dataclasses.replace(IVF_BASELINE, nlist=24,
+                                                   kmeans_iters=2))
+    b.build(x)
+    ladder = search_ef_ladder(b)
+    assert ladder == tuple(sorted(set(ladder)))      # strictly increasing
+    probes = [nprobe_for(b.variant, SearchParams(k=10, ef=e), b.index.nlist)
+              for e in ladder]
+    assert probes == sorted(probes)
+    assert probes[-1] == b.index.nlist               # top rung probes all
+    reachable = {min(r, b.index.nlist) for r in NPROBE_LADDER
+                 if r < b.index.nlist} | {b.index.nlist}
+    assert set(probes) == reachable
+
+    # sharded shares the mapping (basis of ivf equivalence)
+    sh = registry.create("sharded", dataclasses.replace(
+        IVF_BASELINE, backend="sharded", nlist=24, kmeans_iters=2,
+        n_shards=2))
+    sh.build(x)
+    assert search_ef_ladder(sh) == ladder
+
+
+# ---------------------------------------------------------------------------
+# FamilyBaselines <- frontier
+# ---------------------------------------------------------------------------
+
+def test_family_baselines_seed_from_frontier():
+    from repro.core.reward import FamilyBaselines, banded_auc
+
+    pts = [_op(backend="ivf", ef=8, recall=0.80, qps=4000, mem=1000),
+           _op(backend="ivf", ef=16, recall=0.90, qps=3000, mem=1000),
+           _op(backend="ivf", ef=32, recall=0.96, qps=1500, mem=1000),
+           _op(backend="graph", ef=32, recall=0.88, qps=4500, mem=2000),
+           _op(backend="graph", ef=64, recall=0.97, qps=900, mem=2000)]
+    f = _frontier_of(pts)
+    bank = FamilyBaselines()
+    written = bank.seed_from_frontier(f)
+    assert set(written) == {"ivf", "graph"}
+    assert bank.has("ivf") and bank.has("graph")
+    ivf_pts = [p for p in f.points if p.backend == "ivf"]
+    auc, _ = banded_auc(np.array([p.recall for p in ivf_pts]),
+                        np.array([p.qps for p in ivf_pts]))
+    assert bank.get("ivf") == pytest.approx(auc)
+    # banked families are not overwritten by default
+    bank.set("ivf", 123.0)
+    assert bank.seed_from_frontier(f) == {}  # nothing new to write
+    assert bank.get("ivf") == 123.0
+    assert bank.seed_from_frontier(f, overwrite=True)["ivf"] \
+        == pytest.approx(auc)
+    # and the reward path consumes the seeded baseline
+    res = bank.reward("graph", [p for p in f.points if p.backend == "graph"])
+    assert res.valid and res.rel == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: SLO-mode AnnsServer on the seed dataset
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tuned():
+    """One real sweep of a built ivf backend on the seed dataset, shared
+    by the acceptance tests: (ds, backend, raw points, frontier)."""
+    ds = make_dataset("sift-128-euclidean", n_base=2000, n_query=32)
+    b = registry.create("ivf", dataclasses.replace(IVF_BASELINE, nlist=32,
+                                                   kmeans_iters=3),
+                        metric=ds.metric)
+    b.build(ds.base)
+    raw = sweep_target(b, ds, k=10, repeats=2, ef_cap=256)
+    f = frontier_from_points(raw, dataset=ds.spec.name, n_base=len(ds.base),
+                             n_query=len(ds.queries), k=10)
+    return ds, b, raw, f
+
+
+def test_slo_server_meets_recall_and_beats_conservative_rung(tuned):
+    """Acceptance: RecallSLO(0.9) serves with measured recall >= 0.9 at
+    strictly higher QPS than the most conservative ladder rung."""
+    from repro.anns.datasets import recall_at_k
+    from repro.runtime.server import AnnsServer
+
+    ds, b, raw, f = tuned
+    conservative = max(raw, key=lambda p: p.params.ef)
+    # the all-cells probe is ~exact (int8 scan + fp32 rerank), so the
+    # 0.9 SLO is guaranteed feasible from the top rung alone
+    assert conservative.recall >= 0.9
+    srv = AnnsServer(b, max_batch=32, slo=RecallSLO(0.9), frontier=f)
+    pick = srv.operating_point
+    assert pick.recall >= 0.9
+    assert pick.params.ef < conservative.params.ef
+    assert pick.qps > conservative.qps      # strictly faster than max-effort
+    assert srv.params == pick.params        # served at the pick, verbatim
+
+    for q in ds.queries:
+        srv.submit(q)
+    out = srv.run()
+    found = np.stack([r.ids for r in out])
+    assert recall_at_k(found, ds.gt, 10) >= 0.9
+
+
+def test_slo_server_requires_frontier_and_rejects_param_mix(tuned):
+    from repro.runtime.server import AnnsServer
+
+    _, b, _, f = tuned
+    with pytest.raises(ValueError, match="needs a swept frontier"):
+        AnnsServer(b, slo=RecallSLO(0.9))
+    with pytest.raises(ValueError, match="not both"):
+        AnnsServer(b, slo=RecallSLO(0.9), frontier=f,
+                   params=SearchParams(k=10, ef=64))
+    # infeasible SLO fails at construction, not at first flush
+    with pytest.raises(InfeasibleSLO):
+        AnnsServer(b, slo=RecallSLO(1.0, memory_budget_bytes=1),
+                   frontier=f)
+
+
+def test_slo_pick_efs_stay_on_backend_ladder(tuned):
+    """No new jit retrace buckets: every feasible pick's ef is a rung the
+    sweep already compiled."""
+    _, b, _, f = tuned
+    from repro.runtime.server import AnnsServer
+
+    ladder = search_ef_ladder(b)
+    for target in (0.5, 0.85, 0.95):
+        try:
+            srv = AnnsServer(b, slo=RecallSLO(target), frontier=f)
+        except InfeasibleSLO:
+            continue
+        assert srv.params.ef in ladder
+
+
+def test_frontier_roundtrip_preserves_pick(tuned, tmp_path):
+    _, b, _, f = tuned
+    path = str(tmp_path / "tuned.json")
+    save_frontier(path, f)
+    f2 = load_frontier(path)
+    assert f2 == f
+    assert choose(f2, RecallSLO(0.9)) == choose(f, RecallSLO(0.9))
+
+
+# ---------------------------------------------------------------------------
+# e2e: serve --tune --save-frontier / --load-frontier --target-recall
+# ---------------------------------------------------------------------------
+
+def _serve(args, timeout=600):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+
+
+def test_serve_tune_then_slo_serve_subprocess(tmp_path):
+    """Bench host sweeps + saves; serving host loads + holds the SLO.
+    The served params must equal the in-process choose() pick."""
+    fpath = str(tmp_path / "frontier.json")
+    common = ["--backend", "ivf", "--n-base", "500", "--n-query", "16",
+              "--n-requests", "16"]
+    r1 = _serve([*common, "--tune", "--save-frontier", fpath])
+    assert r1.returncode == 0, r1.stderr[-3000:]
+    assert "frontier saved" in r1.stdout
+
+    f = load_frontier(fpath)
+    assert f.dataset == "sift-128-euclidean" and f.n_base == 500
+    expected = choose(f, RecallSLO(0.9), backend="ivf")
+
+    r2 = _serve([*common, "--load-frontier", fpath,
+                 "--target-recall", "0.9"])
+    assert r2.returncode == 0, r2.stderr[-3000:]
+    m = re.search(r"slo pick \[[^\]]*\]: backend=(\S+) ef=(\d+) k=(\d+)",
+                  r2.stdout)
+    assert m, r2.stdout
+    assert m.group(1) == "ivf"
+    assert int(m.group(2)) == expected.params.ef
+    assert int(m.group(3)) == expected.params.k
+    served = re.search(r"recall@10=([\d.]+)", r2.stdout)
+    assert served and float(served.group(1)) >= 0.9
+    assert "served 16 requests" in r2.stdout
+
+
+def test_serve_flag_validation_subprocess():
+    """SLO flags without a frontier source must die at argparse time."""
+    r = _serve(["--target-recall", "0.9"])
+    assert r.returncode == 2
+    assert "frontier-driven" in r.stderr
+    r = _serve(["--memory-budget-mb", "10"])
+    assert r.returncode == 2
+    r = _serve(["--save-frontier", "x.json"])
+    assert r.returncode == 2
+
+
+def test_serve_rejects_k_and_label_mismatch_subprocess():
+    """A k different from the frontier's sweep k invalidates every
+    measured point (and the recall report) — fail fast, don't serve a
+    silently-broken SLO.  Same for a --frontier-label that matches no
+    point."""
+    common = ["--backend", "ivf", "--n-base", "300", "--n-query", "8",
+              "--n-requests", "8", "--load-frontier", FIXTURE]
+    r = _serve([*common, "--target-recall", "0.9", "--k", "20"])
+    assert r.returncode == 2
+    assert "swept at k=10" in r.stderr
+    r = _serve([*common, "--frontier-label", "nope"])
+    assert r.returncode == 2
+    assert "no points labeled" in r.stderr
+    # the fixture's points are all label='glass'; restricting to it works
+    r = _serve([*common, "--frontier-label", "glass",
+                "--target-recall", "0.9"])
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "slo pick" in r.stdout
