@@ -1,0 +1,150 @@
+"""CI bench smoke for the streaming subsystem: one insert -> search ->
+delete -> compact cycle per streaming backend, written to
+``BENCH_stream_smoke.json``.
+
+Two numbers matter and both ride in the artifact per backend:
+
+- ``tail_overhead`` — QPS with a populated delta tail over the
+  empty-tail baseline.  The tail is scanned exactly (fp32, every query),
+  so this is the price of mutability between compactions; it should stay
+  a modest factor, and a regression here means the tail scan stopped
+  being O(tail).
+- ``compact_recovery`` — post-compaction QPS over the same baseline.
+  ``compact()`` folds the tail into the cell-major layout, so this
+  should hover around 1.0 (the index is the same shape it was built
+  at, just with more vectors); a drop means compaction stopped
+  restoring the scan layout.
+
+Recall is measured against ground truth over the *live* set
+(:func:`repro.anns.stream.exact_live_gt`) at every stage — inserted
+vectors must be findable before AND after compaction, deleted ones never.
+Sized for CI wall-clock, not statistical rigor.
+
+    PYTHONPATH=src python benchmarks/smoke_stream.py --out .
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import time
+
+
+def _measure(backend, queries, gt, params, repeats: int):
+    """(qps, recall) of one jitted search over ``queries``."""
+    import jax
+    import numpy as np
+    from repro.anns.datasets import recall_at_k
+
+    res = backend.search(queries, params)        # compile + warm
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = backend.search(queries, params)
+        jax.block_until_ready(res.ids)
+    dt = (time.perf_counter() - t0) / repeats
+    rec = recall_at_k(np.asarray(res.ids), gt, params.k)
+    return len(queries) / dt, float(rec)
+
+
+def run(out_dir: str = ".", n_base: int = 2000, n_query: int = 32,
+        repeats: int = 3, n_insert: int = 192, n_delete: int = 96,
+        backends=("stream_ivf", "stream_sharded")) -> str:
+    import jax
+    import numpy as np
+    from repro.anns import SearchParams, make_dataset, registry
+    from repro.anns.bench import build_timed
+    from repro.anns.engine import family_baseline
+    from repro.anns.stream import exact_live_gt
+
+    ds = make_dataset("sift-128-euclidean", n_base=n_base, n_query=n_query)
+    params = SearchParams(k=10, ef=64)
+    payload = {
+        "bench": "smoke_stream",
+        "dataset": "sift-128-euclidean",
+        "n_base": n_base,
+        "n_query": n_query,
+        "n_insert": n_insert,
+        "n_delete": n_delete,
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "unix_time": time.time(),
+        "backends": {},
+    }
+    rng = np.random.default_rng(0)
+    for backend in backends:
+        v = dataclasses.replace(family_baseline(backend),
+                                nlist=32, kmeans_iters=2,
+                                tail_cap=max(256, n_insert))
+        b = registry.create(backend, v, metric=ds.metric)
+        build_s = build_timed(b, ds.base)
+
+        gt0 = exact_live_gt(b, ds.queries, params.k)
+        qps_base, rec_base = _measure(b, ds.queries, gt0, params, repeats)
+
+        # mutate: insert a drifted batch, delete random base ids — the
+        # tail is now populated and tombstones are live
+        extra = (0.8 * rng.standard_normal((n_insert, ds.base.shape[1]))
+                 ).astype(np.float32)
+        b.insert(extra)
+        victims = rng.choice(n_base, size=n_delete, replace=False)
+        b.delete(victims.astype(np.int64))
+        gt1 = exact_live_gt(b, ds.queries, params.k)
+        qps_tail, rec_tail = _measure(b, ds.queries, gt1, params, repeats)
+
+        # fold the tail back into the cell-major layout
+        t0 = time.perf_counter()
+        b.compact()
+        compact_s = time.perf_counter() - t0
+        gt2 = exact_live_gt(b, ds.queries, params.k)
+        qps_post, rec_post = _measure(b, ds.queries, gt2, params, repeats)
+
+        row = {
+            "build_seconds": build_s,
+            "compact_seconds": compact_s,
+            "n_live": int(b.n_live()),
+            "tail_fraction_peak": float(n_insert /
+                                        (n_base + n_insert - n_delete)),
+            "qps_baseline": qps_base,
+            "qps_tail": qps_tail,
+            "qps_post_compact": qps_post,
+            "tail_overhead": qps_base / qps_tail if qps_tail else 0.0,
+            "compact_recovery": qps_post / qps_base if qps_base else 0.0,
+            "recall_baseline": rec_base,
+            "recall_tail": rec_tail,
+            "recall_post_compact": rec_post,
+        }
+        payload["backends"][backend] = row
+        print(f"smoke/{backend}: qps base={qps_base:.0f} "
+              f"tail={qps_tail:.0f} post={qps_post:.0f} "
+              f"(overhead x{row['tail_overhead']:.2f}, "
+              f"recovery x{row['compact_recovery']:.2f})  "
+              f"recall {rec_base:.3f}/{rec_tail:.3f}/{rec_post:.3f}")
+        # the artifact is a perf record, but the correctness floor is
+        # asserted here so a broken mutation path fails the CI job loudly
+        assert rec_tail >= 0.9, f"tail-state recall collapsed: {rec_tail}"
+        assert rec_post >= 0.9, f"post-compact recall collapsed: {rec_post}"
+        res = b.search(ds.queries, params)
+        returned = set(np.asarray(res.ids).ravel().tolist())
+        assert not (returned & set(victims.tolist())), \
+            "deleted ids surfaced post-compaction"
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_stream_smoke.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=".")
+    ap.add_argument("--n-base", type=int, default=2000)
+    ap.add_argument("--n-query", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    run(out_dir=args.out, n_base=args.n_base, n_query=args.n_query,
+        repeats=args.repeats)

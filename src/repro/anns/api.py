@@ -205,3 +205,57 @@ class AnnsIndex(Protocol):
     def from_state_dict(self, state: dict) -> None:
         """Restore a snapshot produced by :meth:`to_state_dict`."""
         ...
+
+
+@runtime_checkable
+class MutableAnnsIndex(AnnsIndex, Protocol):
+    """A backend that stays correct under online mutation.
+
+    The streaming contract (:mod:`repro.anns.stream`): ``insert`` lands
+    new vectors in a fixed-capacity fp32 delta tail scanned exactly
+    alongside the built structure, ``delete`` tombstones ids through the
+    same validity mask that already guards pad slots (a tombstoned id can
+    never appear in a :class:`SearchResult`), and ``compact`` folds the
+    tail back into the built layout deterministically.  ``seqno`` is the
+    monotone mutation counter checkpoint deltas are ordered by; ``epoch``
+    counts compactions (a delta only replays onto the base epoch it was
+    recorded against).
+    """
+
+    seqno: int
+    epoch: int
+
+    def insert(self, vectors, ids=None) -> np.ndarray:
+        """Add (m, d) vectors; returns their (m,) int32 ids (assigned
+        sequentially when ``ids`` is None).  Raises when the delta tail
+        is full — call :meth:`compact` first."""
+        ...
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base or tail); returns how many were newly
+        tombstoned.  Unknown / already-deleted ids are ignored."""
+        ...
+
+    def compact(self) -> None:
+        """Fold the tail into the built layout and drop tombstones.
+        Deterministic: the same mutation history always yields the same
+        bytes.  Bumps ``epoch``."""
+        ...
+
+    def n_live(self) -> int:
+        """Vectors currently visible to search (base minus tombstones
+        plus live tail)."""
+        ...
+
+    def tail_fraction(self) -> float:
+        """Live tail entries / ``n_live()`` — the drift/compaction
+        trigger quantity (tail scans are exact but O(tail))."""
+        ...
+
+
+def supports_mutation(backend) -> bool:
+    """True when ``backend`` implements the streaming mutation protocol
+    (duck-typed: the :class:`MutableAnnsIndex` surface)."""
+    return all(callable(getattr(backend, m, None))
+               for m in ("insert", "delete", "compact", "n_live",
+                         "tail_fraction"))

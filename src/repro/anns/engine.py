@@ -51,6 +51,9 @@ class VariantConfig:
                                      # (oversized cells split at build)
     # -- sharded backend: device-mesh scale-out knob ---------------------
     n_shards: int = 1                # cell-granular shards of the layout
+    # -- streaming backends (repro.anns.stream) --------------------------
+    tail_cap: int = 256              # delta-tail capacity (per shard for
+                                     # stream_sharded); 0 = default
 
     def __post_init__(self):
         # fail fast on unknown families: a typo'd backend name would
@@ -102,6 +105,11 @@ FAMILY_BASELINE_VARIANTS = {
         GLASS_BASELINE, backend="quantized_prefilter", rerank_factor=2),
     "ivf": IVF_BASELINE,
     "sharded": SHARDED_BASELINE,
+    # the streaming family serves the same layouts mutable-by-default; its
+    # baseline is the read-only family's with the mutation machinery on
+    "stream_ivf": dataclasses.replace(IVF_BASELINE, backend="stream_ivf"),
+    "stream_sharded": dataclasses.replace(SHARDED_BASELINE,
+                                          backend="stream_sharded"),
 }
 
 

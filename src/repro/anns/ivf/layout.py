@@ -84,6 +84,42 @@ def _padded_cells(offsets: np.ndarray, nlist: int) -> np.ndarray:
     return cells
 
 
+def layout_from_assignments(base: np.ndarray, a: np.ndarray,
+                            centroids: np.ndarray, *,
+                            metric: str) -> IvfIndex:
+    """Lay (n, d) vectors out cell-major given their cell assignments.
+
+    The deterministic second half of :func:`build_ivf` (stable argsort of
+    the assignments, CSR offsets, padded cell table, int8 codes), shared
+    with the streaming subsystem's ``compact()`` — which assigns against
+    the *existing* centroids instead of retraining, then rebuilds the
+    layout through exactly this code path, so a compacted index and a
+    fresh build differ only in their coarse quantizer.
+
+    The returned index's ``ids`` map cell-major positions back to *row
+    indices of ``base``* — callers carrying original ids compose them on
+    top.
+    """
+    base = np.ascontiguousarray(np.asarray(base, np.float32))
+    nlist = len(centroids)
+    order = np.argsort(a, kind="stable").astype(np.int32)   # position -> row
+    counts = np.bincount(a, minlength=nlist) if len(a) \
+        else np.zeros(nlist, np.int64)
+    offsets = np.zeros(nlist + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    base_cm = base[order]
+    base_q, scales = quantize_int8(jnp.asarray(base_cm))
+    return IvfIndex(
+        centroids=jnp.asarray(np.asarray(centroids, np.float32)),
+        cells=jnp.asarray(_padded_cells(offsets, nlist)),
+        ids=jnp.asarray(order),
+        base=jnp.asarray(base_cm),
+        base_q=base_q,
+        scales=scales,
+        offsets=offsets,
+        metric=metric)
+
+
 def build_ivf(base: np.ndarray, *, nlist: int, kmeans_iters: int = 8,
               metric: str = "l2", seed: int = 0,
               use_kernel: bool = True,
@@ -105,37 +141,28 @@ def build_ivf(base: np.ndarray, *, nlist: int, kmeans_iters: int = 8,
     a, _ = assign(base, centroids, metric=metric, use_kernel=use_kernel)
     if max_cell:
         centroids, a = split_oversized(base, centroids, a, cap=max_cell)
-        nlist = len(centroids)
-
-    order = np.argsort(a, kind="stable").astype(np.int32)   # position -> id
-    counts = np.bincount(a, minlength=nlist)
-    offsets = np.zeros(nlist + 1, np.int64)
-    np.cumsum(counts, out=offsets[1:])
-    base_cm = base[order]
-    base_q, scales = quantize_int8(jnp.asarray(base_cm))
-    return IvfIndex(
-        centroids=jnp.asarray(centroids),
-        cells=jnp.asarray(_padded_cells(offsets, nlist)),
-        ids=jnp.asarray(order),
-        base=jnp.asarray(base_cm),
-        base_q=base_q,
-        scales=scales,
-        offsets=offsets,
-        metric=metric)
+    return layout_from_assignments(base, a, centroids, metric=metric)
 
 
 def ivf_stats(index: IvfIndex) -> dict:
     counts = np.diff(index.offsets)
+    # degenerate layouts are legal states for a *mutable* index (a
+    # fully-compacted-empty index keeps a single dummy cell; a fresh one
+    # may hold one vector in one cell) — every ratio below must define
+    # itself instead of dividing by zero
+    mean = float(counts.mean()) if counts.size else 0.0
+    biggest = int(counts.max(initial=0))
     return {
         "n": index.n,
         "nlist": index.nlist,
         "cell_pad": index.cell_pad,
-        "mean_cell": float(counts.mean()),
-        "max_cell": int(counts.max(initial=0)),
+        "mean_cell": mean,
+        "max_cell": biggest,
         "empty_cells": int((counts == 0).sum()),
         # padding overhead of the dense probe view vs the CSR blocks
         "pad_overhead": float(index.nlist * index.cell_pad / max(index.n, 1)),
         # skew: how far the worst cell sits above the mean — the quantity
-        # the balanced-assignment cap (build_ivf max_cell) bounds
-        "cell_skew": float(counts.max(initial=0) / max(counts.mean(), 1e-9)),
+        # the balanced-assignment cap (build_ivf max_cell) bounds; an
+        # empty index has no skew, a single non-empty cell has skew 1
+        "cell_skew": float(biggest / mean) if mean > 0 else 0.0,
     }

@@ -24,6 +24,11 @@ Built-ins:
                               device mesh: coarse top-nprobe doubles as
                               shard routing, per-shard int8 scans, fp32
                               rerank over the merged shortlists.
+- ``"stream_ivf"`` /
+  ``"stream_sharded"``      — the mutable forms (``repro.anns.stream``):
+                              insert into fixed-capacity delta tails,
+                              tombstone deletes, deterministic
+                              compaction, incremental checkpoint deltas.
 
 Adding a backend::
 
@@ -60,6 +65,8 @@ _BUILTIN_MODULES: Dict[str, str] = {
     "quantized_prefilter": "repro.anns.backends.quantized",
     "ivf": "repro.anns.backends.ivf",
     "sharded": "repro.anns.backends.sharded",
+    "stream_ivf": "repro.anns.stream.backends",
+    "stream_sharded": "repro.anns.stream.backends",
 }
 
 

@@ -1,0 +1,36 @@
+"""Streaming mutable ANNS: delta tails, tombstones, deterministic compaction.
+
+The ``ivf``/``sharded`` family is build-once; this package makes it
+mutable without giving up the family's layout or its jit hygiene:
+
+- ``insert`` appends into a fixed-capacity fp32 **delta tail** (per shard
+  for the sharded backend) scanned exactly alongside the int8 cells and
+  merged before the final top-k — new vectors are served with exact
+  distances from the moment they land.
+- ``delete`` sets **tombstone masks** over the cell-major store and the
+  tail, reusing the validity-mask machinery that already guards pad
+  slots, so a tombstoned id can never surface in a ``SearchResult``.
+- ``compact()`` folds the tail back into the cell-major CSR layout by
+  assigning against the *existing* k-means centroids (plus the
+  ``split_oversized`` cap invariant) through the same
+  :func:`~repro.anns.ivf.layout.layout_from_assignments` path as
+  ``build_ivf`` — deterministic, so the same mutation history always
+  yields the same bytes.
+- Persistence is incremental: ``repro.ckpt.save_index_delta`` records
+  tail leaves + tombstone bitmaps + the monotone mutation ``seqno``, and
+  ``load_index`` replays base+deltas to the exact live state.
+
+Because the tail is a fixed-shape array and tombstones are a fixed-shape
+mask, **mutations never retrace** the jitted search — only ``compact()``
+(which changes the base layout) compiles a new program.
+
+See :class:`repro.anns.api.MutableAnnsIndex` for the protocol and
+``repro.anns.tune.drift`` for the serving-side drift monitor this
+subsystem feeds.
+"""
+from repro.anns.stream.backends import (DeltaTailFull, StreamingIvfBackend,
+                                        StreamingShardedBackend,
+                                        exact_live_gt)
+
+__all__ = ["DeltaTailFull", "StreamingIvfBackend",
+           "StreamingShardedBackend", "exact_live_gt"]

@@ -1,0 +1,584 @@
+"""Mutable ``stream_ivf`` / ``stream_sharded`` backends.
+
+Both subclass their read-only family backend and add host-side mutable
+masters (numpy: delta tail, tombstone mask, id maps) mirrored to fixed-
+shape device arrays after every mutation — the jitted search programs in
+:mod:`repro.anns.stream.search` consume the mirrors, so insert/delete
+change array *contents* only and never retrace.
+
+Mutation contract (see :class:`repro.anns.api.MutableAnnsIndex`):
+
+- ``insert(vectors, ids=None)`` — ids assigned sequentially when
+  omitted; duplicate live ids are an error; a full tail raises
+  :class:`DeltaTailFull` (call ``compact()``).  The sharded backend
+  routes each vector to its nearest cell's owning shard and appends to
+  that shard's tail — per-shard capacity, like every other per-shard
+  array.
+- ``delete(ids)`` — tombstones base entries via the position mask and
+  tail entries by freeing the slot; returns the newly-dead count.
+- ``compact()`` — survivors (base in cell-major order, then tail in
+  slot order) are re-assigned against the *existing* centroids (plus
+  the ``split_oversized`` cap invariant when the variant sets
+  ``max_cell``) and laid out through
+  :func:`repro.anns.ivf.layout.layout_from_assignments` — the same
+  deterministic path as ``build_ivf``, so one mutation history always
+  compacts to the same bytes.  Bumps ``epoch``; deltas recorded against
+  an older epoch no longer apply.
+
+Checkpointing: ``to_state_dict`` extends the family format with tail
+leaves and packed tombstone bitmaps (``STATE_FORMAT`` bump; older
+read-only snapshots still load, coming up with fresh mutable state);
+``to_delta_dict``/``apply_delta_dict`` carry just the mutable leaves +
+(``seqno``, ``epoch``) for ``repro.ckpt.save_index_delta``'s
+incremental checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.api import SearchParams, SearchResult
+from repro.anns.backends.ivf import IvfBackend, nprobe_for, round_nprobe, \
+    shortlist_width
+from repro.anns.backends.sharded import ShardedBackend
+from repro.anns.ivf.kmeans import assign, split_oversized
+from repro.anns.ivf.layout import layout_from_assignments
+from repro.anns.ivf.sharding import place_on_mesh, shard_ivf
+from repro.anns.registry import register
+from repro.anns.stream.search import (make_placed_stream_search,
+                                      stream_ivf_search,
+                                      stream_sharded_search)
+
+DEFAULT_TAIL_CAP = 256
+
+
+class DeltaTailFull(RuntimeError):
+    """The fixed-capacity delta tail cannot hold the insert — compact()
+    (or delete) to make room.  ``free`` says how many slots were left
+    (for the sharded backend: in the shard the insert routed to)."""
+
+    def __init__(self, msg: str, *, free: int = 0):
+        super().__init__(msg)
+        self.free = int(free)
+
+
+def _pack_mask(mask: np.ndarray) -> np.ndarray:
+    return np.packbits(np.asarray(mask, bool).reshape(-1))
+
+def _unpack_mask(bits: np.ndarray, shape) -> np.ndarray:
+    n = int(np.prod(shape))
+    out = np.unpackbits(np.asarray(bits, np.uint8), count=n)
+    return out.astype(bool).reshape(shape)
+
+
+def _check_insert_ids(ids, m: int):
+    ids = np.asarray(ids, np.int32).reshape(-1)
+    if len(ids) != m:
+        raise ValueError(f"{m} vectors but {len(ids)} ids")
+    if np.any(ids < 0):
+        raise ValueError("ids must be non-negative")
+    if len(np.unique(ids)) != m:
+        raise ValueError("duplicate ids within one insert batch")
+    return ids
+
+
+def exact_live_gt(backend, queries, k: int) -> np.ndarray:
+    """Exact top-k *ids* over a mutable backend's current live set —
+    the moving ground truth mutations invalidate ``Dataset.gt`` against.
+    Brute force over ``live_vectors()``; rows are ids (not positions),
+    -1 padded when fewer than k vectors are live."""
+    from repro.kernels.distance.ref import distance_ref
+    import jax
+
+    vecs, ids = backend.live_vectors()
+    queries = np.asarray(queries, np.float32)
+    if len(vecs) == 0:
+        return np.full((len(queries), k), -1, np.int32)
+    kk = min(k, len(vecs))
+    out = []
+    b = jnp.asarray(vecs)
+    for i in range(0, len(queries), 512):
+        d = distance_ref(jnp.asarray(queries[i:i + 512]), b, backend.metric)
+        _, idx = jax.lax.top_k(-d, kk)
+        out.append(np.asarray(idx))
+    rows = ids[np.concatenate(out, axis=0)]
+    if kk < k:
+        rows = np.concatenate(
+            [rows, np.full((len(rows), k - kk), -1, np.int32)], axis=1)
+    return rows.astype(np.int32)
+
+
+class _StreamCommon:
+    """Host-side mutable state shared by both streaming backends.
+
+    Masters are plain numpy (the checkpoint/delta leaves); subclasses
+    define the tail geometry (flat vs per-shard) via ``_tail_shape`` and
+    rebuild device mirrors in ``_sync``.
+    """
+
+    def _variant_tail_cap(self) -> int:
+        cap = getattr(self.variant, "tail_cap", 0) or DEFAULT_TAIL_CAP
+        return max(1, int(cap))
+
+    def _init_mutable(self) -> None:
+        """Fresh mutable state over the current built index (used after
+        build() and when restoring a pre-streaming checkpoint)."""
+        idx = self.index
+        ids = np.asarray(idx.ids)
+        d = int(idx.centroids.shape[1])
+        shape = self._tail_shape()
+        self._live = np.ones(idx.n, bool)
+        self._tail_vecs = np.zeros(shape + (d,), np.float32)
+        self._tail_ids = np.full(shape, -1, np.int32)
+        self._tail_live = np.zeros(shape, bool)
+        self.seqno = 0
+        self.epoch = 0
+        self._next_id = int(ids.max(initial=-1)) + 1
+        self._rebuild_maps()
+        self._sync()
+
+    def _rebuild_maps(self) -> None:
+        ids = np.asarray(self.index.ids)
+        self._id_pos = {int(i): p for p, i in enumerate(ids) if i >= 0}
+        # tail map values are index tuples — (slot,) flat, (shard, slot)
+        # per-shard — so one delete path serves both layouts
+        self._tail_pos = {}
+        for slot in zip(*np.nonzero(self._tail_ids >= 0)):
+            self._tail_pos[int(self._tail_ids[slot])] = slot
+
+    # -- MutableAnnsIndex protocol ----------------------------------------
+    def n_live(self) -> int:
+        return int(self._live.sum()) + int(self._tail_live.sum())
+
+    def tail_fraction(self) -> float:
+        return float(self._tail_live.sum()) / max(self.n_live(), 1)
+
+    def delete(self, ids) -> int:
+        assert self.index is not None, "build() first"
+        count = 0
+        for i in np.asarray(ids).reshape(-1).tolist():
+            i = int(i)
+            p = self._id_pos.get(i)
+            if p is not None and self._live[p]:
+                self._live[p] = False
+                count += 1
+                continue
+            s = self._tail_pos.pop(i, None)
+            if s is not None:
+                self._tail_live[s] = False
+                self._tail_ids[s] = -1
+                count += 1
+        self.seqno += 1
+        self._sync()
+        return count
+
+    def insert(self, vectors, ids=None) -> np.ndarray:
+        assert self.index is not None, "build() first"
+        vecs = np.ascontiguousarray(np.asarray(vectors, np.float32))
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        m = len(vecs)
+        if ids is None:
+            ids = np.arange(self._next_id, self._next_id + m,
+                            dtype=np.int32)
+        ids = _check_insert_ids(ids, m)
+        for i in ids.tolist():
+            p = self._id_pos.get(int(i))
+            if (p is not None and self._live[p]) or int(i) in self._tail_pos:
+                raise ValueError(f"id {int(i)} is already live — delete it "
+                                 f"first or pick a fresh id")
+        self._place_in_tail(vecs, ids)     # validates capacity, then fills
+        self._next_id = max(self._next_id, int(ids.max()) + 1)
+        self.seqno += 1
+        self._sync()
+        return ids
+
+    def compact(self) -> None:
+        """Fold tail + tombstones into a fresh cell-major layout against
+        the existing centroids; see the module docstring.  An all-dead
+        index keeps a single masked dummy row (the layout needs >= 1
+        vector; it can never surface — its ``live`` bit stays False)."""
+        assert self.index is not None, "build() first"
+        base, ids_arr = self._global_base()
+        live_pos = np.flatnonzero(self._live)
+        tail_slots = np.nonzero(self._tail_live)
+        vecs = np.concatenate(
+            [base[live_pos], self._tail_vecs[tail_slots]], axis=0)
+        oids = np.concatenate(
+            [ids_arr[live_pos], self._tail_ids[tail_slots]]).astype(np.int32)
+        empty = len(vecs) == 0
+        if empty:
+            vecs = np.zeros((1, base.shape[1]), np.float32)
+            oids = np.array([-1], np.int32)
+        centroids = np.asarray(self.index.centroids)
+        a, _ = assign(vecs, centroids, metric=self.metric)
+        max_cell = getattr(self.variant, "max_cell", 0) or None
+        if max_cell:
+            centroids, a = split_oversized(vecs, centroids, a, cap=max_cell)
+        inner = layout_from_assignments(vecs, a, centroids,
+                                        metric=self.metric)
+        # inner.ids maps positions -> rows of `vecs`; compose the
+        # surviving original ids on top
+        inner = dataclasses.replace(
+            inner, ids=jnp.asarray(oids[np.asarray(inner.ids)]))
+        self._install_compacted(inner)
+        self._live = np.ones(self.index.n, bool)
+        if empty:
+            self._live[:] = False
+        self._tail_vecs[:] = 0.0
+        self._tail_ids[:] = -1
+        self._tail_live[:] = False
+        self.epoch += 1
+        self.seqno += 1
+        self._rebuild_maps()
+        self._sync()
+
+    def live_vectors(self) -> tuple[np.ndarray, np.ndarray]:
+        """(L, d) fp32 vectors + (L,) int32 ids of everything currently
+        visible to search, base (cell-major order) then tail (slot
+        order) — the exact-reference counterpart of one search."""
+        base, ids_arr = self._global_base()
+        live_pos = np.flatnonzero(self._live)
+        tail_slots = np.nonzero(self._tail_live)
+        vecs = np.concatenate(
+            [base[live_pos], self._tail_vecs[tail_slots]], axis=0)
+        ids = np.concatenate(
+            [ids_arr[live_pos], self._tail_ids[tail_slots]]).astype(np.int32)
+        return vecs, ids
+
+    # -- mutable-state (de)serialization ----------------------------------
+    def _mutable_leaves(self) -> dict:
+        leaves = {"live_bits": _pack_mask(self._live),
+                  "seqno": int(self.seqno), "epoch": int(self.epoch),
+                  "next_id": int(self._next_id),
+                  "tail_cap": int(self.tail_cap)}
+        leaves.update(self._tail_leaves())
+        return leaves
+
+    def _restore_mutable(self, state: dict) -> None:
+        self.tail_cap = int(state.get("tail_cap", self.tail_cap))
+        self._live = _unpack_mask(state["live_bits"], (self.index.n,))
+        self._restore_tail_leaves(state)
+        self.seqno = int(state["seqno"])
+        self.epoch = int(state["epoch"])
+        self._next_id = int(state["next_id"])
+        self._rebuild_maps()
+        self._sync()
+
+    def to_delta_dict(self) -> dict:
+        """Cumulative mutable-state snapshot since the base epoch: tail
+        leaves + tombstone bitmap + (seqno, epoch).  Applying the latest
+        delta reproduces the live state exactly; deltas are tiny next to
+        the base (O(tail_cap * d) + N/8 bitmap bytes)."""
+        assert self.index is not None, "build() first"
+        return {"backend": self.name, **self._mutable_leaves()}
+
+    def apply_delta_dict(self, delta: dict) -> None:
+        """Replay one delta onto the restored base.  The delta must have
+        been recorded against this base's compaction epoch — a stale
+        delta (pre-compaction tail layout) cannot be replayed."""
+        assert self.index is not None, "restore the base first"
+        d_epoch = int(delta["epoch"])
+        if d_epoch != self.epoch:
+            raise ValueError(
+                f"checkpoint delta was recorded at epoch {d_epoch}, but "
+                f"the base is at epoch {self.epoch} — deltas do not span "
+                f"compactions; re-save the base")
+        self._restore_mutable({**delta, "tail_cap": self.tail_cap})
+
+
+@register("stream_ivf")
+class StreamingIvfBackend(_StreamCommon, IvfBackend):
+    """Mutable single-device IVF: flat (cap, d) delta tail."""
+
+    name = "stream_ivf"
+    #: v1 = the read-only ivf layout (no stamp); v2 adds tail leaves +
+    #: tombstone bitmaps + mutation counters.  v1 snapshots still load.
+    STATE_FORMAT = 2
+
+    def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
+        if variant is None:
+            from repro.anns.engine import VariantConfig
+            variant = VariantConfig(backend=self.name)
+        IvfBackend.__init__(self, variant, metric=metric, seed=seed)
+        self.tail_cap = self._variant_tail_cap()
+
+    def _tail_shape(self) -> tuple:
+        return (self.tail_cap,)
+
+    def _global_base(self):
+        return (np.asarray(self.index.base),
+                np.asarray(self.index.ids))
+
+    def build(self, base: np.ndarray):
+        out = IvfBackend.build(self, base)
+        self._init_mutable()
+        return out
+
+    def _install_compacted(self, inner) -> None:
+        self.index = inner
+
+    def _place_in_tail(self, vecs: np.ndarray, ids: np.ndarray) -> None:
+        free = np.flatnonzero(self._tail_ids < 0)
+        if len(free) < len(vecs):
+            raise DeltaTailFull(
+                f"delta tail has {len(free)} free slots of {self.tail_cap}, "
+                f"cannot insert {len(vecs)} vectors — compact() first",
+                free=len(free))
+        slots = free[: len(vecs)]
+        self._tail_vecs[slots] = vecs
+        self._tail_ids[slots] = ids
+        self._tail_live[slots] = True
+        for s, i in zip(slots.tolist(), ids.tolist()):
+            self._tail_pos[int(i)] = (int(s),)
+
+    def _sync(self) -> None:
+        """Refresh the fixed-shape device mirrors the jitted search
+        consumes.  Shapes never change across mutations — no retrace."""
+        self._live_dev = jnp.asarray(self._live)
+        self._tail_vecs_dev = jnp.asarray(self._tail_vecs)
+        self._tail_live_dev = jnp.asarray(self._tail_live)
+        self._ids_ext = jnp.concatenate(
+            [self.index.ids, jnp.asarray(self._tail_ids)])
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        assert self.index is not None, "build() first"
+        idx = self.index
+        p = params.resolved(self.variant)
+        # fixed output shape across mutations: clamp to the layout's
+        # capacity (base rows + tail slots); short rows pad with id -1
+        k = min(p.k, idx.n + self.tail_cap)
+        k_base = min(k, idx.n)
+        nprobe = nprobe_for(self.variant, p, idx.nlist)
+        min_probe = idx.min_cells_for(k_base)
+        if nprobe < min_probe:
+            nprobe = min(round_nprobe(min_probe), idx.nlist)
+        m = shortlist_width(p, k_base, idx.n, nprobe, idx.cell_pad)
+        quantized = True if params.quantized is None else bool(params.quantized)
+        out_ids, out_d, scanned = stream_ivf_search(
+            idx.centroids, idx.cells, idx.base, idx.base_q, idx.scales,
+            self._live_dev, self._tail_vecs_dev, self._tail_live_dev,
+            self._ids_ext, jnp.asarray(queries, jnp.float32),
+            nprobe=nprobe, k=k, m=m, metric=self.metric, quantized=quantized)
+        return SearchResult(ids=out_ids, dists=out_d, steps=nprobe,
+                            expansions=scanned, backend=self.name)
+
+    def memory_bytes(self) -> int:
+        extra = 0
+        if self.index is not None:
+            extra = (self._tail_vecs.nbytes + self._tail_ids.nbytes
+                     + self._tail_live.nbytes + self._live.nbytes)
+        return IvfBackend.memory_bytes(self) + extra
+
+    def _tail_leaves(self) -> dict:
+        return {"tail_vecs": self._tail_vecs.copy(),
+                "tail_ids": self._tail_ids.copy(),
+                "tail_live_bits": _pack_mask(self._tail_live)}
+
+    def _restore_tail_leaves(self, state: dict) -> None:
+        self._tail_vecs = np.asarray(state["tail_vecs"],
+                                     np.float32).copy()
+        self._tail_ids = np.asarray(state["tail_ids"], np.int32).copy()
+        self._tail_live = _unpack_mask(state["tail_live_bits"],
+                                       self._tail_ids.shape)
+        self.tail_cap = int(self._tail_ids.shape[0])
+
+    def to_state_dict(self) -> dict:
+        st = IvfBackend.to_state_dict(self)
+        st["backend"] = self.name
+        st["state_format"] = self.STATE_FORMAT
+        st.update(self._mutable_leaves())
+        return st
+
+    def from_state_dict(self, state: dict) -> None:
+        IvfBackend.from_state_dict(self, state)
+        if int(state.get("state_format", 1)) >= 2:
+            self._restore_mutable(state)
+        else:
+            # a read-only ivf snapshot: adopt it with fresh mutable state
+            self._init_mutable()
+
+
+@register("stream_sharded")
+class StreamingShardedBackend(_StreamCommon, ShardedBackend):
+    """Mutable cell-routed sharded IVF: per-shard (S, cap, d) tails.
+
+    Inserts route through the coarse quantizer to the owning shard's
+    tail, so the mutable leaves shard exactly like the base slices (no
+    replicated mutable state; the placed search gathers only (S, B, cap)
+    tail scores on top of the read-only merge traffic).
+    """
+
+    name = "stream_sharded"
+    #: v2 = the read-only shardN/base_f layout; v3 adds per-shard tail
+    #: leaves + tombstone bitmaps + mutation counters.  v1/v2 load fine.
+    STATE_FORMAT = 3
+
+    def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
+        if variant is None:
+            from repro.anns.engine import VariantConfig
+            variant = VariantConfig(backend=self.name)
+        ShardedBackend.__init__(self, variant, metric=metric, seed=seed)
+        self.tail_cap = self._variant_tail_cap()
+        self._mesh = None
+
+    def _tail_shape(self) -> tuple:
+        return (self.index.n_shards, self.tail_cap)
+
+    def _global_base(self):
+        idx = self.index
+        vb = np.asarray(idx.vec_bounds)
+        bf = np.asarray(idx.base_f)
+        parts = [bf[j, : int(vb[j + 1] - vb[j])]
+                 for j in range(idx.n_shards)]
+        return np.concatenate(parts, axis=0), np.asarray(idx.ids)
+
+    def build(self, base: np.ndarray):
+        out = ShardedBackend.build(self, base)
+        self._init_mutable()
+        return out
+
+    def _install_compacted(self, inner) -> None:
+        self.index = shard_ivf(inner, self.index.n_shards)
+        if self._mesh is not None:
+            self.index = place_on_mesh(self.index, self._mesh)
+
+    def place_on_mesh(self, mesh) -> None:
+        ShardedBackend.place_on_mesh(self, mesh)
+        self._mesh = mesh
+        self._placed_search = make_placed_stream_search(mesh)
+        self._sync()
+
+    def _route_to_shards(self, vecs: np.ndarray) -> np.ndarray:
+        """Owning shard per vector: nearest cell through the existing
+        coarse quantizer, then the static cell->shard map — the same
+        routing one of these vectors gets at search time."""
+        idx = self.index
+        a, _ = assign(vecs, np.asarray(idx.centroids), metric=self.metric)
+        return np.asarray(idx.cell_shard)[a]
+
+    def _place_in_tail(self, vecs: np.ndarray, ids: np.ndarray) -> None:
+        shard_of = self._route_to_shards(vecs)
+        frees = {}
+        for j in np.unique(shard_of).tolist():
+            need = int((shard_of == j).sum())
+            free = np.flatnonzero(self._tail_ids[j] < 0)
+            if len(free) < need:
+                raise DeltaTailFull(
+                    f"shard {j}'s delta tail has {len(free)} free slots "
+                    f"of {self.tail_cap}, cannot take {need} routed "
+                    f"vectors — compact() first", free=len(free))
+            frees[j] = free
+        used = {j: 0 for j in frees}
+        for r, j in enumerate(shard_of.tolist()):
+            s = int(frees[j][used[j]])
+            used[j] += 1
+            self._tail_vecs[j, s] = vecs[r]
+            self._tail_ids[j, s] = ids[r]
+            self._tail_live[j, s] = True
+            self._tail_pos[int(ids[r])] = (j, s)
+
+    def _sync(self) -> None:
+        """Refresh fixed-shape device mirrors; when mesh-placed, the
+        mutable leaves are sharded along the same ``"shard"`` axis as
+        the base slices and ``ids_ext`` stays replicated."""
+        idx = self.index
+        vb = np.asarray(idx.vec_bounds)
+        npad = int(idx.base_q.shape[1])
+        live = np.zeros((idx.n_shards, npad), bool)
+        for j in range(idx.n_shards):
+            v0, v1 = int(vb[j]), int(vb[j + 1])
+            live[j, : v1 - v0] = self._live[v0:v1]
+        ids_ext = np.concatenate(
+            [np.asarray(idx.ids), self._tail_ids.reshape(-1)])
+        if self._mesh is None:
+            self._live_dev = jnp.asarray(live)
+            self._tail_vecs_dev = jnp.asarray(self._tail_vecs)
+            self._tail_live_dev = jnp.asarray(self._tail_live)
+            self._ids_ext = jnp.asarray(ids_ext)
+        else:
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            def put(x, spec):
+                return jax.device_put(jnp.asarray(x),
+                                      NamedSharding(self._mesh, spec))
+            self._live_dev = put(live, P("shard", None))
+            self._tail_vecs_dev = put(self._tail_vecs,
+                                      P("shard", None, None))
+            self._tail_live_dev = put(self._tail_live, P("shard", None))
+            self._ids_ext = put(ids_ext, P())
+
+    def _invocation(self, queries, params: SearchParams):
+        idx = self.index
+        p = params.resolved(self.variant)
+        k = min(p.k, idx.n + idx.n_shards * self.tail_cap)
+        k_base = min(k, idx.n)
+        nprobe = nprobe_for(self.variant, p, idx.nlist)
+        min_probe = idx.min_cells_for(k_base)
+        if nprobe < min_probe:
+            nprobe = min(round_nprobe(min_probe), idx.nlist)
+        m = shortlist_width(p, k_base, idx.n, nprobe, idx.cell_pad)
+        quantized = True if params.quantized is None else bool(params.quantized)
+        args = (idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
+                idx.vec_start, idx.base_q, idx.scales, idx.base_f,
+                self._live_dev, self._tail_vecs_dev, self._tail_live_dev,
+                self._ids_ext, jnp.asarray(queries, jnp.float32))
+        statics = dict(nprobe=nprobe, k=k, m=m, metric=self.metric,
+                       quantized=quantized)
+        return args, statics
+
+    def _search_fn(self):
+        return self._placed_search or stream_sharded_search
+
+    def memory_bytes(self) -> int:
+        extra = 0
+        if self.index is not None:
+            extra = (self._tail_vecs.nbytes + self._tail_ids.nbytes
+                     + self._tail_live.nbytes + self._live.nbytes)
+        return ShardedBackend.memory_bytes(self) + extra
+
+    def device_memory_bytes(self) -> int:
+        if self.index is None:
+            return 0
+        extra = ((self._tail_vecs.nbytes + self._tail_ids.nbytes
+                  + self._tail_live.nbytes + self._live.nbytes)
+                 // max(self.index.n_shards, 1))
+        return ShardedBackend.device_memory_bytes(self) + extra
+
+    def _tail_leaves(self) -> dict:
+        leaves = {"tail_live_bits": _pack_mask(self._tail_live)}
+        for j in range(self.index.n_shards):
+            leaves[f"shard{j}/tail_vecs"] = self._tail_vecs[j].copy()
+            leaves[f"shard{j}/tail_ids"] = self._tail_ids[j].copy()
+        return leaves
+
+    def _restore_tail_leaves(self, state: dict) -> None:
+        S = self.index.n_shards
+        self._tail_vecs = np.stack(
+            [np.asarray(state[f"shard{j}/tail_vecs"], np.float32)
+             for j in range(S)])
+        self._tail_ids = np.stack(
+            [np.asarray(state[f"shard{j}/tail_ids"], np.int32)
+             for j in range(S)])
+        self._tail_live = _unpack_mask(state["tail_live_bits"],
+                                       self._tail_ids.shape)
+        self.tail_cap = int(self._tail_ids.shape[1])
+
+    def to_state_dict(self) -> dict:
+        st = ShardedBackend.to_state_dict(self)
+        st["backend"] = self.name
+        st["state_format"] = self.STATE_FORMAT
+        st.update(self._mutable_leaves())
+        return st
+
+    def from_state_dict(self, state: dict) -> None:
+        ShardedBackend.from_state_dict(self, state)
+        if int(state.get("state_format", 1)) >= 3:
+            self._restore_mutable(state)
+        else:
+            # a read-only sharded snapshot (v1 replicated base or v2
+            # shardN/base_f): adopt it with fresh mutable state
+            self._init_mutable()

@@ -23,6 +23,8 @@ are deferred), so loading a frontier and choosing a point is cheap.
 """
 from repro.anns.tune.choose import (InfeasibleSLO, RecallSLO, choose,
                                     feasible_points)
+from repro.anns.tune.drift import (DriftMonitor, DriftVerdict,
+                                   resweep_and_choose)
 from repro.anns.tune.frontier import (FRONTIER_FORMAT, Frontier,
                                       OperatingPoint, dominates,
                                       frontier_from_points, pareto_prune,
@@ -37,4 +39,5 @@ __all__ = [
     "RecallSLO", "InfeasibleSLO", "choose", "feasible_points",
     "DEFAULT_TUNE_BACKENDS", "sweep_frontier", "sweep_target",
     "frontier_from_curve",
+    "DriftMonitor", "DriftVerdict", "resweep_and_choose",
 ]

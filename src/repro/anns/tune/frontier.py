@@ -168,11 +168,13 @@ class Frontier:
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "Frontier":
-        fmt = int(d.get("frontier_format", 1))
-        if fmt > FRONTIER_FORMAT:
-            raise ValueError(
-                f"frontier format {fmt} is newer than the installed "
-                f"tuner's {FRONTIER_FORMAT} — re-sweep or upgrade")
+        # the same fail-fast every artifact loader shares (function-level
+        # import keeps this module's stdlib+numpy-only promise intact)
+        from repro.ckpt.versioning import check_artifact_format
+        check_artifact_format(
+            "frontier", int(d.get("frontier_format", 1)), FRONTIER_FORMAT,
+            what="frontier artifact",
+            hint="re-sweep or upgrade the installed tuner")
         return cls(points=tuple(OperatingPoint.from_json_dict(p)
                                 for p in d.get("points", ())),
                    dataset=d.get("dataset", ""),

@@ -1,7 +1,10 @@
 from repro.ckpt.checkpoint import save_checkpoint, load_checkpoint
 from repro.ckpt.frontier_io import load_frontier, save_frontier
-from repro.ckpt.index_io import load_index, save_index
+from repro.ckpt.index_io import (load_index, save_index, save_index_delta)
 from repro.ckpt.manager import CheckpointManager
+from repro.ckpt.versioning import ArtifactFormatError, check_artifact_format
 
 __all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
-           "save_index", "load_index", "save_frontier", "load_frontier"]
+           "save_index", "load_index", "save_index_delta",
+           "save_frontier", "load_frontier",
+           "ArtifactFormatError", "check_artifact_format"]

@@ -22,19 +22,42 @@ State-dict format versioning: a backend that evolves its layout stamps a
 newest format it understands as a ``STATE_FORMAT`` class attribute).
 The key rides in the manifest like any other non-array field, and the
 backend's ``from_state_dict`` branches on it — e.g. the sharded backend
-loads both v1 (replicated ``base`` rerank store) and v2 (per-shard
-``shardN/base_f`` slices) checkpoints.  :func:`load_index` fails fast
-with a clear error when a checkpoint is *newer* than the installed
-backend, instead of letting ``from_state_dict`` KeyError on leaves it
-has never heard of.
+loads v1 (replicated ``base`` rerank store) and v2 (per-shard
+``shardN/base_f`` slices) checkpoints, and the streaming backends add
+one more format on top for their mutable leaves.  :func:`load_index`
+fails fast with a typed :class:`repro.ckpt.versioning.ArtifactFormatError`
+when a checkpoint is *newer* than the installed backend, instead of
+letting ``from_state_dict`` KeyError on leaves it has never heard of.
+
+Incremental deltas (streaming backends): :func:`save_index_delta` writes
+a mutable-state snapshot — delta-tail leaves, tombstone bitmaps, and the
+monotone mutation ``seqno`` — as a ``delta_<seqno>`` sub-checkpoint
+inside the base index directory.  **Delta replay ordering**: deltas are
+cumulative since the base's compaction ``epoch``, and :func:`load_index`
+replays them in ascending-``seqno`` order (the zero-padded directory
+names sort lexically == numerically), validating that seqnos strictly
+increase and that each delta's ``epoch`` matches the base's — a delta
+recorded before a compaction cannot apply to the compacted base.
+Re-saving the base (``save_index`` overwrites the directory atomically)
+clears accumulated deltas by construction.
 """
 from __future__ import annotations
+
+import glob
+import os
 
 import numpy as np
 
 from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint
+from repro.ckpt.versioning import check_artifact_format
 
 INDEX_META_KEY = "anns_index_meta"
+INDEX_DELTA_META_KEY = "anns_index_delta_meta"
+
+#: Format of :func:`save_index_delta` payloads (the envelope: meta keys,
+#: replay rules).  The *leaves* inside are backend-owned, versioned by
+#: the backend's ``state_format`` / ``epoch`` fields.
+DELTA_FORMAT = 1
 
 
 def save_index(path: str, backend, *, step: int = 0,
@@ -60,6 +83,75 @@ def save_index(path: str, backend, *, step: int = 0,
                     extra={INDEX_META_KEY: meta, **(extra or {})})
 
 
+def save_index_delta(path: str, backend, *, extra: dict | None = None) -> str:
+    """Write an incremental mutable-state delta under a base index dir.
+
+    ``backend`` must implement the streaming protocol
+    (``to_delta_dict``); the delta lands at
+    ``path/delta_<seqno zero-padded>`` so lexical directory order equals
+    replay order.  Returns the delta directory path.  Writing a delta at
+    a seqno that already exists overwrites it (same mutation state).
+    """
+    to_delta = getattr(backend, "to_delta_dict", None)
+    if not callable(to_delta):
+        raise TypeError(
+            f"backend {getattr(backend, 'name', backend)!r} does not "
+            f"support incremental deltas (no to_delta_dict); use a "
+            f"streaming backend or save_index for a full snapshot")
+    state = to_delta()
+    arrays = {k: np.asarray(v) for k, v in state.items()
+              if isinstance(v, np.ndarray)}
+    meta = {k: v for k, v in state.items() if not isinstance(v, np.ndarray)}
+    meta.setdefault("backend", backend.name)
+    meta["delta_format"] = DELTA_FORMAT
+    seqno = int(meta["seqno"])
+    sub = os.path.join(path, f"delta_{seqno:012d}")
+    save_checkpoint(sub, arrays, seqno,
+                    extra={INDEX_DELTA_META_KEY: meta, **(extra or {})})
+    return sub
+
+
+def _delta_dirs(path: str) -> list[str]:
+    """Delta sub-checkpoints of a base index dir, in replay (seqno)
+    order — the zero-padded names make sorted() numeric."""
+    return sorted(glob.glob(os.path.join(path, "delta_*")))
+
+
+def _replay_deltas(path: str, backend) -> None:
+    prev_seqno = None
+    for sub in _delta_dirs(path):
+        arrays, _step, extra = load_checkpoint(sub)
+        dmeta = extra.get(INDEX_DELTA_META_KEY)
+        if dmeta is None:
+            raise KeyError(
+                f"{sub!r} is not an index delta (missing "
+                f"{INDEX_DELTA_META_KEY!r} in manifest extra)")
+        dmeta = dict(dmeta)
+        check_artifact_format(
+            "delta", dmeta.get("delta_format"), DELTA_FORMAT,
+            what=f"{sub!r}", hint="upgrade the serving host or re-save "
+            "the base index")
+        if dmeta.get("backend") not in (None, backend.name):
+            raise ValueError(
+                f"{sub!r} is a delta for backend {dmeta.get('backend')!r}, "
+                f"but the base restored {backend.name!r}")
+        apply_delta = getattr(backend, "apply_delta_dict", None)
+        if not callable(apply_delta):
+            raise ValueError(
+                f"{path!r} carries checkpoint deltas, but restored "
+                f"backend {backend.name!r} cannot replay them (no "
+                f"apply_delta_dict) — the index was saved by a streaming "
+                f"backend")
+        seqno = int(dmeta.get("seqno", -1))
+        if prev_seqno is not None and seqno <= prev_seqno:
+            raise ValueError(
+                f"{sub!r} has mutation seqno {seqno} <= the previously "
+                f"replayed {prev_seqno} — the delta sequence is not "
+                f"monotone; the checkpoint directory is corrupt")
+        apply_delta({**arrays, **dmeta})
+        prev_seqno = seqno
+
+
 def load_index(path: str, variant=None, *, seed: int = 0):
     """Restore a backend instance from :func:`save_index` output.
 
@@ -67,7 +159,10 @@ def load_index(path: str, variant=None, *, seed: int = 0):
     itself; ``variant`` (optional) overrides search-time knob defaults —
     when omitted, the variant saved alongside the index is restored, so
     the serving host lands on the build host's operating point.
-    Build-time state always comes entirely from the snapshot.
+    Build-time state always comes entirely from the snapshot.  Any
+    ``delta_*`` sub-checkpoints (:func:`save_index_delta`) are replayed
+    in seqno order on top of the base, reproducing the exact live
+    mutable state.
     """
     from repro.anns import registry
 
@@ -84,12 +179,11 @@ def load_index(path: str, variant=None, *, seed: int = 0):
         variant = VariantConfig(**saved_variant)
     backend = registry.create(meta["backend"], variant,
                               metric=meta.get("metric", "l2"), seed=seed)
-    fmt = meta.get("state_format")
-    supported = getattr(type(backend), "STATE_FORMAT", 1)
-    if fmt is not None and int(fmt) > int(supported):
-        raise ValueError(
-            f"{path!r} holds a {meta['backend']!r} index in state format "
-            f"{fmt}, newer than the installed backend's {supported} — "
-            f"rebuild the index or upgrade the serving host")
+    check_artifact_format(
+        "state", meta.get("state_format"),
+        getattr(type(backend), "STATE_FORMAT", 1),
+        what=f"{path!r} ({meta['backend']!r} index)",
+        hint="rebuild the index or upgrade the serving host")
     backend.from_state_dict({**arrays, **meta})
+    _replay_deltas(path, backend)
     return backend

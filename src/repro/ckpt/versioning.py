@@ -1,0 +1,55 @@
+"""Artifact format versioning: the one fail-fast check every loader shares.
+
+Three artifact families carry a format stamp — index checkpoints
+(``state_format``, per backend), index checkpoint *deltas*
+(``delta_format``, see :mod:`repro.ckpt.index_io`), and swept frontiers
+(``frontier_format``, see :mod:`repro.ckpt.frontier_io`).  All three obey
+the same convention: the payload records the format it was written in,
+the installed code declares the newest format it understands, and a
+loader meeting a *newer* stamp must raise a typed error naming both
+numbers — never fall through to a ``KeyError`` on leaves it has never
+heard of, and never silently drop fields it doesn't recognize.
+
+This module is stdlib-only so the jax-free artifact layers (the tuner's
+frontier model, CLI validation paths) can use it without paying kernel
+import time.
+"""
+from __future__ import annotations
+
+
+class ArtifactFormatError(ValueError):
+    """An artifact's declared format is newer than this code understands.
+
+    ``found``/``supported`` carry the two format numbers so callers can
+    report or branch without re-parsing the message.  Subclasses
+    ``ValueError`` — every pre-existing caller catching the loaders'
+    ValueErrors keeps working.
+    """
+
+    def __init__(self, msg: str, *, kind: str, found: int, supported: int):
+        super().__init__(msg)
+        self.kind = kind
+        self.found = int(found)
+        self.supported = int(supported)
+
+
+def check_artifact_format(kind: str, found, supported: int, *,
+                          what: str = "", hint: str = "") -> None:
+    """Raise :class:`ArtifactFormatError` iff ``found`` is newer than
+    ``supported``.
+
+    ``kind`` names the stamp ("state", "delta", "frontier"); ``what``
+    describes the artifact for the message (defaults to the kind);
+    ``hint`` suggests the fix.  ``found`` may be ``None`` (an unstamped
+    v1 artifact) — that always passes.
+    """
+    if found is None:
+        return
+    if int(found) <= int(supported):
+        return
+    msg = (f"{what or kind} is in {kind} format {int(found)}, newer than "
+           f"the supported {int(supported)}")
+    if hint:
+        msg += f" — {hint}"
+    raise ArtifactFormatError(msg, kind=kind, found=int(found),
+                              supported=int(supported))

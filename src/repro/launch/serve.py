@@ -23,6 +23,13 @@ host loads the artifact:
 
     serve --backend ivf --tune --save-frontier f.json          # bench host
     serve --backend ivf --load-frontier f.json --target-recall 0.95
+
+Streaming backends (``--backend stream_ivf``/``stream_sharded``) mutate
+in place; ``--drift-retune MARGIN``/``--max-tail-frac FRAC`` attach a
+:class:`repro.anns.tune.DriftMonitor` to the SLO pick, and
+``--stream-demo N`` runs the scripted drift episode end-to-end (insert N
+drifted vectors -> tail trigger -> compact -> recall drift -> ladder
+re-sweep -> SLO restored), printing greppable ``drift:`` markers.
 """
 import argparse
 import time
@@ -67,6 +74,160 @@ def _memory_line(target) -> str:
     return f"{total/1e6:.1f} MB resident"
 
 
+def _serve_window(server, queries, gt, k):
+    """Push one query window through the server; returns (recall, p50 ms)."""
+    import numpy as np
+    from repro.anns.datasets import recall_at_k
+    for q in queries:
+        server.submit(q)
+    responses = server.run()
+    found = np.stack([r.ids for r in responses])
+    lat = np.array([r.latency_ms for r in responses])
+    return (recall_at_k(found, gt, k), float(np.percentile(lat, 50)))
+
+
+def _voronoi_tied_sites(cents, rng, *, g=6, n_sites=3):
+    """Points exactly equidistant to ``g`` centroids, every other
+    centroid strictly farther.
+
+    Equidistance to ``g`` points is ``g - 1`` *linear* constraints on x
+    (the pairwise-bisector hyperplanes), so the site is a least-squares
+    solve, seeded at a centroid and its ``g - 1`` nearest neighbors to
+    keep the tied distance short.  Returns ``(x, d_tie, margin)`` rows —
+    ``margin`` is how much farther the nearest non-anchor centroid sits.
+    Vectors inserted around such a site split ~evenly across ``g`` cells
+    under nearest-centroid assignment, so any ``nprobe < g`` search over
+    them loses recall — the worst case for a partition layout, and the
+    drift the demo manufactures.
+    """
+    import numpy as np
+    sites = []
+    for seed in rng.permutation(len(cents)):
+        anchor_idx = np.argsort(
+            np.linalg.norm(cents - cents[seed], axis=1))[:g]
+        A = cents[anchor_idx]
+        a0 = A[0]
+        M = 2.0 * (a0 - A[1:])
+        rhs = (a0 @ a0) - np.einsum("ij,ij->i", A[1:], A[1:])
+        mean = A.mean(axis=0)
+        y, *_ = np.linalg.lstsq(M, rhs - M @ mean, rcond=None)
+        x = mean + y
+        dx = np.linalg.norm(cents - x, axis=1)
+        d_tie = float(dx[anchor_idx].mean())
+        spread = float(dx[anchor_idx].max() - dx[anchor_idx].min())
+        margin = float(np.delete(dx, anchor_idx).min() - d_tie)
+        if spread < 1e-6 * d_tie and margin > 0.03 * d_tie:
+            sites.append((x, d_tie, margin))
+        if len(sites) >= n_sites:
+            break
+    return sites
+
+
+def _run_stream_drift_demo(server, target, ds, slo, args):
+    """Scripted streaming-drift episode (greppable ``drift:`` markers).
+
+    Phase A serves the build distribution — the monitor stays quiet.
+    Then vectors drawn around Voronoi-tied sites (equidistant to several
+    k-means centroids, :func:`_voronoi_tied_sites`) are inserted until
+    the delta tail trips the ``--max-tail-frac`` trigger; while they sit
+    in the tail they are scanned exactly, so recall holds.  The driver
+    answers with ``compact()``, which folds them into cells via the
+    *existing* centroids — each site's points split across all its tied
+    cells.  Phase B serves queries drawn at the same sites: their true
+    neighbors now straddle more cells than the build-time pick probes,
+    served recall EWMA falls below the frontier's prediction, and the
+    ``recall_drift`` verdict fires.  The driver re-sweeps the
+    neighboring ladder rungs against ground truth over the *live* set
+    and re-chooses for the same SLO; phase C verifies the served recall
+    is back above the target.
+    """
+    import dataclasses
+
+    import numpy as np
+    from repro.anns.stream import exact_live_gt
+    from repro.anns.tune import resweep_and_choose
+
+    k, window = args.k, server.max_batch
+    rng = np.random.default_rng(7)
+    # phase A: in-distribution traffic matches the swept prediction
+    for _ in range(2):
+        idx = rng.integers(0, len(ds.queries), size=window)
+        rec, p50 = _serve_window(server, ds.queries[idx], ds.gt[idx], k)
+        v = server.observe_served(recall=rec, latency_ms=p50)
+        print(f"drift: baseline window {v.describe()}")
+    # drift arrives: vectors at cell-boundary sites of the frozen layout
+    d = ds.base.shape[1]
+    cents = np.asarray(target.index.centroids, np.float64)
+    sites = _voronoi_tied_sites(cents, rng)
+    if not sites:
+        print("drift: no tied sites found on this layout — demo aborted")
+        return
+    n_q = 4 * window
+    per = -(-args.stream_demo // len(sites))       # ceil split over sites
+    chunks, qchunks = [], []
+    for x, d_tie, margin in sites:
+        sig = min(0.3 * margin, 0.05 * d_tie) / np.sqrt(d)
+        chunks.append(x + sig * rng.standard_normal((per, d)))
+        qchunks.append(x + sig * rng.standard_normal(
+            (-(-n_q // len(sites)), d)))
+    drifted = np.concatenate(chunks)[: args.stream_demo].astype(np.float32)
+    dq = np.concatenate(qchunks)[:n_q].astype(np.float32)
+    new_ids = target.insert(drifted)
+    print(f"drift: inserted {len(new_ids)} vectors "
+          f"(tail_frac={target.tail_fraction():.3f})")
+    # measured against ground truth over the live set: the tail is
+    # scanned exactly, so recall holds — the tail trigger fires on
+    # state, not on quality
+    idx = rng.integers(0, len(ds.queries), size=window)
+    wq = ds.queries[idx]
+    rec, p50 = _serve_window(server, wq, exact_live_gt(target, wq, k), k)
+    v = server.observe_served(recall=rec, latency_ms=p50)
+    print(f"drift: verdict {v.describe()}")
+    if v.reason == "tail_frac":
+        target.compact()
+        server.drift_monitor.rebase(server.operating_point)
+        print(f"drift: compacted -> epoch {target.epoch}, "
+              f"n_live={target.n_live()}, "
+              f"tail_frac={target.tail_fraction():.3f}")
+    # phase B: served distribution follows the drift — queries land at
+    # the same tied sites, ground truth re-derived over the live set
+    dgt = exact_live_gt(target, dq, k)
+    triggered = None
+    for w in range(len(dq) // window):
+        sl = slice(w * window, (w + 1) * window)
+        rec, p50 = _serve_window(server, dq[sl], dgt[sl], k)
+        v = server.observe_served(recall=rec, latency_ms=p50)
+        print(f"drift: drifted window {v.describe()}")
+        if v.triggered:
+            triggered = v
+            break
+    if triggered is None or triggered.reason != "recall_drift":
+        print("drift: no recall_drift verdict — served recall still "
+              "within margin of the swept prediction")
+        return
+    # re-tune against ground truth over the live set: re-sweep the
+    # neighboring rungs, re-choose for the same SLO, adopt the pick
+    live_ds = dataclasses.replace(ds, queries=dq, gt=dgt)
+    old_ef = server.params.ef
+    point, _refront = resweep_and_choose(
+        target, live_ds, slo, server.operating_point, k=k,
+        repeats=args.tune_repeats, label="retune")
+    server.apply_operating_point(point)
+    print(f"drift: retune ef {old_ef} -> {server.params.ef} "
+          f"(swept recall={point.recall:.3f} qps={point.qps:.0f})")
+    # phase C: served recall back above the SLO target
+    recs = []
+    for w in range(2):
+        idx = rng.integers(0, len(dq), size=window)
+        rec, p50 = _serve_window(server, dq[idx], dgt[idx], k)
+        server.observe_served(recall=rec, latency_ms=p50)
+        recs.append(rec)
+    post = float(np.mean(recs))
+    print(f"drift: post-retune recall={post:.3f} "
+          f"target={slo.target_recall:.3f} "
+          f"{'slo restored' if post >= slo.target_recall else 'SLO NOT MET'}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sift-128-euclidean")
@@ -81,6 +242,8 @@ def main():
     ap.add_argument("--n-shards", type=int, default=None,
                     help="cell-granular shard count (sharded backend); "
                          "with enough devices the shards are mesh-placed")
+    ap.add_argument("--nlist", type=int, default=None,
+                    help="k-means cell count (ivf-family backends)")
     ap.add_argument("--optimized", action="store_true",
                     help="serve the CRINN-optimized variant instead of GLASS")
     ap.add_argument("--save-index", metavar="DIR", default=None,
@@ -111,6 +274,27 @@ def main():
     ap.add_argument("--memory-budget-mb", type=float, default=None,
                     help="SLO memory constraint: the pick's per-device "
                          "resident bytes must fit this budget")
+    # -- streaming / drift (repro.anns.stream + tune.drift) --------------
+    ap.add_argument("--tail-cap", type=int, default=None,
+                    help="delta-tail capacity for streaming backends "
+                         "(per shard for stream_sharded)")
+    ap.add_argument("--tune-ef-cap", type=int, default=None,
+                    help="cap the swept effort ladder at this ef (--tune "
+                         "sweep-cost knob)")
+    ap.add_argument("--drift-retune", type=float, default=None,
+                    metavar="MARGIN",
+                    help="attach a drift monitor: trigger a re-tune when "
+                         "served recall EWMA falls MARGIN below the "
+                         "frontier pick's swept recall (SLO mode only)")
+    ap.add_argument("--max-tail-frac", type=float, default=None,
+                    help="drift-monitor tail trigger: flag when the "
+                         "delta tail exceeds this fraction of live "
+                         "vectors (streaming backends, SLO mode)")
+    ap.add_argument("--stream-demo", type=int, default=None, metavar="N",
+                    help="run the scripted drift episode: serve, insert "
+                         "N drifted vectors, compact on the tail trigger, "
+                         "re-tune on the recall trigger (needs a "
+                         "streaming backend + SLO mode + both drift flags)")
     args = ap.parse_args()
 
     if args.tune and args.load_frontier:
@@ -125,6 +309,16 @@ def main():
     if args.memory_budget_mb is not None and args.target_recall is None:
         ap.error("--memory-budget-mb only constrains an SLO pick; add "
                  "--target-recall")
+    if ((args.drift_retune is not None or args.max_tail_frac is not None)
+            and args.target_recall is None):
+        ap.error("drift monitoring compares served recall against an SLO "
+                 "pick; --drift-retune/--max-tail-frac need --target-recall")
+    if args.stream_demo is not None:
+        if args.stream_demo < 1:
+            ap.error("--stream-demo needs a positive vector count")
+        if args.drift_retune is None or args.max_tail_frac is None:
+            ap.error("--stream-demo exercises both triggers; set "
+                     "--drift-retune MARGIN and --max-tail-frac FRAC")
 
     import dataclasses
 
@@ -148,6 +342,10 @@ def main():
     variant = dataclasses.replace(variant, backend=args.backend)
     if args.n_shards:
         variant = dataclasses.replace(variant, n_shards=args.n_shards)
+    if args.nlist:
+        variant = dataclasses.replace(variant, nlist=args.nlist)
+    if args.tail_cap:
+        variant = dataclasses.replace(variant, tail_cap=args.tail_cap)
     if args.load_index:
         t0 = time.time()
         target = ckpt.load_index(args.load_index)   # bare AnnsIndex backend
@@ -167,7 +365,15 @@ def main():
             ckpt.save_index(args.save_index, target)
             print(f"index state checkpointed to {args.save_index}")
 
-    if getattr(target, "name", "") == "sharded":
+    if args.stream_demo is not None:
+        from repro.anns.api import supports_mutation
+        if not supports_mutation(target):
+            ap.error(f"--stream-demo needs a mutable backend "
+                     f"(stream_ivf/stream_sharded); "
+                     f"{getattr(target, 'name', args.backend)!r} is "
+                     f"read-only")
+
+    if getattr(target, "name", "") in ("sharded", "stream_sharded"):
         from repro.launch.mesh import shard_mesh_if_available
         ns = target.index.n_shards
         mesh = shard_mesh_if_available(ns)
@@ -200,7 +406,8 @@ def main():
         from repro.anns.tune import sweep_frontier
         t0 = time.time()
         frontier = sweep_frontier(ds, backends=(), targets=[target],
-                                  k=args.k, repeats=args.tune_repeats)
+                                  k=args.k, repeats=args.tune_repeats,
+                                  ef_cap=args.tune_ef_cap)
         print(f"swept {frontier.describe()} in {time.time()-t0:.1f}s")
     if args.save_frontier and frontier is not None:
         ckpt.save_frontier(args.save_frontier, frontier)
@@ -234,6 +441,18 @@ def main():
               f"ef={server.params.ef} k={server.params.k} "
               f"(swept recall={op.recall:.3f} qps={op.qps:.0f} "
               f"dev_mem_mb={op.device_memory_bytes/1e6:.1f})")
+        if args.drift_retune is not None or args.max_tail_frac is not None:
+            from repro.anns.tune import DriftMonitor
+            margin = (args.drift_retune if args.drift_retune is not None
+                      else 0.02)
+            server.attach_drift_monitor(DriftMonitor(
+                server.operating_point, recall_margin=margin,
+                max_tail_frac=args.max_tail_frac, min_observations=2))
+            print(f"drift monitor attached (margin={margin:.3f}, "
+                  f"max_tail_frac={args.max_tail_frac})")
+        if args.stream_demo is not None:
+            _run_stream_drift_demo(server, target, ds, slo, args)
+            return
     else:
         server = AnnsServer(target, max_batch=args.max_batch,
                             params=SearchParams(k=args.k, ef=args.ef))
@@ -251,6 +470,10 @@ def main():
           f"({len(responses)/dt:,.0f} QPS)")
     print(f"recall@{args.k}={rec:.3f}  latency p50={np.percentile(lat,50):.1f}ms "
           f"p99={np.percentile(lat,99):.1f}ms")
+    verdict = server.observe_served(recall=rec,
+                                    latency_ms=float(np.percentile(lat, 50)))
+    if verdict is not None and verdict.triggered:
+        print(f"drift: verdict {verdict.describe()}")
 
 
 if __name__ == "__main__":

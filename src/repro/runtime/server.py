@@ -77,22 +77,63 @@ class AnnsServer:
             self.params = params or SearchParams(k=k, ef=ef)
         self.queue: list[AnnsRequest] = []
         self.served = 0
+        self.drift_monitor = None
 
-    def _pick(self, slo, frontier):
-        """Constrained choice restricted to the served backend, ef
-        re-snapped onto its static ladder."""
-        from repro.anns.tune import choose, replace_params
+    @property
+    def backend(self):
+        """The bare AnnsIndex behind this server (unwraps the Engine
+        facade) — mutation and telemetry hooks talk to this."""
+        return (self.engine.backend if isinstance(self.engine, Engine)
+                else self.engine)
 
-        backend = (self.engine.backend if isinstance(self.engine, Engine)
-                   else self.engine)
-        point = choose(frontier, slo, backend=getattr(backend, "name", None))
+    def _snap_point(self, point):
+        """``ef`` re-snapped onto the served backend's static ladder."""
+        from repro.anns.tune import replace_params
+
         ef = point.params.ef
-        if ef not in search_ef_ladder(backend):
+        if ef not in search_ef_ladder(self.backend):
             # off-ladder ef (e.g. a frontier swept by an older ladder):
             # snap up — a wider beam can only help recall, and the rung
             # is a trace the server would compile anyway
             point = replace_params(point, ef=round_ef(ef))
         return point
+
+    def _pick(self, slo, frontier):
+        """Constrained choice restricted to the served backend, ef
+        re-snapped onto its static ladder."""
+        from repro.anns.tune import choose
+
+        point = choose(frontier, slo,
+                       backend=getattr(self.backend, "name", None))
+        return self._snap_point(point)
+
+    def attach_drift_monitor(self, monitor) -> None:
+        """Watch served telemetry with a
+        :class:`repro.anns.tune.DriftMonitor` (fed via
+        :meth:`observe_served`)."""
+        self.drift_monitor = monitor
+
+    def observe_served(self, *, recall: float, latency_ms: float | None = None):
+        """Fold one served window's measured telemetry into the attached
+        drift monitor; the backend's live tail fraction rides along when
+        the backend is mutable.  Returns the monitor's
+        :class:`~repro.anns.tune.DriftVerdict` (None when no monitor)."""
+        if self.drift_monitor is None:
+            return None
+        tail_fn = getattr(self.backend, "tail_fraction", None)
+        tail = float(tail_fn()) if callable(tail_fn) else 0.0
+        return self.drift_monitor.observe(recall=recall, latency_ms=latency_ms,
+                                          tail_fraction=tail)
+
+    def apply_operating_point(self, point) -> None:
+        """Adopt a re-chosen operating point mid-session (post-retune):
+        params snap onto the ladder, and the drift monitor — if any —
+        rebases so stale EWMAs don't immediately re-trigger."""
+        point = self._snap_point(point)
+        self.operating_point = point
+        self.params = point.params
+        if self.drift_monitor is not None:
+            self.drift_monitor.rebase(point)
 
     # legacy attribute views of the typed params
     @property
@@ -114,6 +155,11 @@ class AnnsServer:
         idx = getattr(self.engine, "index", None)
         if idx is None:
             return None
+        # re-read every flush: a streaming backend mutates mid-session,
+        # so a size cached at construction would clamp k against stale N
+        n_live = getattr(self.backend, "n_live", None)  # mutable backends
+        if callable(n_live):
+            return int(n_live())
         n = getattr(idx, "n", None)                 # GraphIndex
         if n is not None:
             return int(n)

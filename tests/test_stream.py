@@ -1,0 +1,537 @@
+"""Streaming mutable index tests: the subsystem's four contract
+properties plus the drift-retune loop it feeds.
+
+- **inserted vectors are served before compaction** — the delta tail is
+  scanned exactly, so at max nprobe with fp32 scans the search must
+  agree with brute force over the live set, tail included.
+- **tombstoned ids never surface** — pre-compaction, post-compaction,
+  and after checkpoint delta replay: three different code paths must all
+  honor the same mask.
+- **compact() is deterministic and layout-honest** — the same mutation
+  history twice yields byte-identical state, and the folded index is
+  search-identical (exact mode) to a fresh ``build_ivf`` over the
+  survivors.
+- **incremental checkpoints are exact** — base + deltas replays to the
+  live state bit-for-bit, pre-delta (v1 read-only) snapshots still load,
+  and every format stamp (state / delta / frontier) fails fast through
+  the one shared :func:`repro.ckpt.versioning.check_artifact_format`.
+
+Plus: the sharded streaming backend must stay search-equivalent to the
+single-device one through the whole mutation lifecycle (the family's
+standing invariant), and the serve driver's drift episode — recall EWMA
+drops below the frontier's prediction, a ladder-local re-sweep re-picks
+— runs end-to-end in a subprocess.
+"""
+import dataclasses
+import json
+import os
+import re
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro import ckpt
+from repro.anns import SearchParams, make_dataset, registry
+from repro.anns.api import search_ef_ladder, supports_mutation
+from repro.anns.datasets import recall_at_k
+from repro.anns.engine import family_baseline
+from repro.anns.ivf import build_ivf, ivf_stats
+from repro.anns.stream import (DeltaTailFull, StreamingIvfBackend,
+                               exact_live_gt)
+from repro.anns.tune import (DriftMonitor, InfeasibleSLO, OperatingPoint,
+                             RecallSLO, frontier_from_points,
+                             resweep_and_choose)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+N_BASE, N_QUERY, NLIST, TAIL_CAP = 1500, 24, 32, 256
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("sift-128-euclidean", n_base=N_BASE, n_query=N_QUERY)
+
+
+def _stream(name, ds, *, tail_cap=TAIL_CAP, seed=0, **kw):
+    v = dataclasses.replace(family_baseline(name), nlist=NLIST,
+                            kmeans_iters=2, tail_cap=tail_cap, **kw)
+    b = registry.create(name, v, metric=ds.metric, seed=seed)
+    b.build(ds.base)
+    return b
+
+
+def _exact_params(b, k=10):
+    """Max-nprobe fp32 search: every cell probed, no quantization — the
+    result must equal brute force over the live set."""
+    return SearchParams(k=k, ef=64 * b.index.nlist, quantized=False,
+                        rerank_factor=4)
+
+
+def _new_vecs(rng, n, d):
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# property (a): inserted vectors are served pre-compaction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_inserted_vectors_served_before_compaction(ds, name):
+    b = _stream(name, ds)
+    rng = np.random.default_rng(1)
+    extra = _new_vecs(rng, 100, ds.base.shape[1])
+    new_ids = b.insert(extra)
+    assert b.tail_fraction() > 0.0 and supports_mutation(b)
+    p = _exact_params(b)
+    res = b.search(ds.queries, p)
+    gt = exact_live_gt(b, ds.queries, p.k)
+    assert recall_at_k(np.asarray(res.ids), gt, p.k) == 1.0
+    # an inserted vector queried verbatim must return its own fresh id
+    probe = b.search(extra[:8], _exact_params(b, k=1))
+    assert np.asarray(probe.ids).ravel().tolist() == new_ids[:8].tolist()
+
+
+# ---------------------------------------------------------------------------
+# property (b): tombstoned ids never surface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_tombstoned_ids_never_surface(ds, name, tmp_path):
+    b = _stream(name, ds)
+    rng = np.random.default_rng(2)
+    new_ids = b.insert(_new_vecs(rng, 64, ds.base.shape[1]))
+    dead = np.concatenate([rng.choice(N_BASE, 40, replace=False),
+                           new_ids[:10]]).astype(np.int64)
+    assert b.delete(dead) == len(dead)
+    p = _exact_params(b)
+
+    def surfaced(backend):
+        return set(np.asarray(backend.search(ds.queries, p).ids).ravel()
+                   ) & set(dead.tolist())
+
+    assert not surfaced(b)                       # masked in tail + cells
+    path = str(tmp_path / "idx.ckpt")
+    ckpt.save_index(path, b)
+    b2 = _stream(name, ds)
+    b2.insert(_new_vecs(np.random.default_rng(2), 64, ds.base.shape[1]))
+    ckpt.save_index_delta(path, b)
+    assert not surfaced(ckpt.load_index(path))   # after delta replay
+    b.compact()
+    assert not surfaced(b)                       # dropped from the layout
+    assert b.n_live() == N_BASE + 64 - len(dead)
+    # a tombstone outlives the id: deleting twice is a no-op, not a revival
+    assert b.delete(dead[:5]) == 0
+
+
+# ---------------------------------------------------------------------------
+# property (c): compact() determinism
+# ---------------------------------------------------------------------------
+
+def _mutate(b, seed):
+    rng = np.random.default_rng(seed)
+    b.insert(_new_vecs(rng, 80, b.live_vectors()[0].shape[-1]))
+    b.delete(rng.choice(N_BASE, 50, replace=False).astype(np.int64))
+
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_same_mutation_history_compacts_to_identical_bytes(ds, name):
+    """Fixed seed + same insert/delete sequence twice -> compact() must
+    produce byte-identical state (the determinism save/replay relies on)."""
+    states = []
+    for _ in range(2):
+        b = _stream(name, ds)
+        _mutate(b, seed=3)
+        b.compact()
+        states.append(b.to_state_dict())
+    a, c = states
+    assert a.keys() == c.keys()
+    for key in a:
+        va, vc = a[key], c[key]
+        if isinstance(va, np.ndarray):
+            assert va.dtype == vc.dtype and va.tobytes() == vc.tobytes(), key
+        else:
+            assert va == vc, key
+
+
+def test_compact_search_identical_to_fresh_build_on_survivors(ds):
+    """compact() folds through the *existing* centroids while a fresh
+    build re-trains k-means on the survivors — different layouts, but in
+    exact mode (all cells, fp32) both must serve brute-force results."""
+    b = _stream("stream_ivf", ds)
+    _mutate(b, seed=4)
+    vecs, ids = b.live_vectors()
+    b.compact()
+    assert b.tail_fraction() == 0.0
+    fresh = registry.create(
+        "ivf", dataclasses.replace(b.variant, backend="ivf"),
+        metric=ds.metric, seed=0)
+    fresh.build(vecs)
+    p = _exact_params(b)
+    got = np.asarray(b.search(ds.queries, p).ids)
+    ref = np.asarray(fresh.search(ds.queries, p).ids)
+    np.testing.assert_array_equal(got, ids[ref])   # fresh ids are positions
+
+
+# ---------------------------------------------------------------------------
+# property (d): incremental checkpoints
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_base_plus_deltas_restores_bit_for_bit(ds, name, tmp_path):
+    b = _stream(name, ds)
+    path = str(tmp_path / "idx.ckpt")
+    ckpt.save_index(path, b)               # base: pre-mutation snapshot
+    rng = np.random.default_rng(5)
+    b.insert(_new_vecs(rng, 30, ds.base.shape[1]))
+    ckpt.save_index_delta(path, b)
+    b.delete(rng.choice(N_BASE, 20, replace=False).astype(np.int64))
+    b.insert(_new_vecs(rng, 10, ds.base.shape[1]))
+    ckpt.save_index_delta(path, b)         # second, higher-seqno delta
+    loaded = ckpt.load_index(path)
+    live, restored = b.to_state_dict(), loaded.to_state_dict()
+    assert live.keys() == restored.keys()
+    for key in live:
+        va, vb = live[key], restored[key]
+        if isinstance(va, np.ndarray):
+            assert va.tobytes() == vb.tobytes(), key
+        else:
+            assert va == vb, key
+    p = _exact_params(b)
+    np.testing.assert_array_equal(np.asarray(b.search(ds.queries, p).ids),
+                                  np.asarray(loaded.search(ds.queries, p).ids))
+
+
+def test_pre_delta_readonly_snapshot_loads_with_fresh_mutable_state(
+        ds, tmp_path):
+    """A v1 snapshot (read-only ivf layout, no state_format stamp, no
+    mutable leaves) restored under the streaming backend must come up
+    clean-slate mutable, not KeyError on leaves it never had."""
+    b = _stream("stream_ivf", ds)
+    v1 = {k: v for k, v in b.to_state_dict().items()
+          if k not in ("state_format", "live_bits", "seqno", "epoch",
+                       "next_id", "tail_cap", "tail_vecs", "tail_ids",
+                       "tail_live_bits")}
+    b.to_state_dict = lambda: v1
+    path = str(tmp_path / "v1.ckpt")
+    ckpt.save_index(path, b)
+    loaded = ckpt.load_index(path)
+    assert isinstance(loaded, StreamingIvfBackend)
+    assert loaded.n_live() == N_BASE and loaded.tail_fraction() == 0.0
+    loaded.insert(_new_vecs(np.random.default_rng(6), 4, ds.base.shape[1]))
+    assert loaded.n_live() == N_BASE + 4
+
+
+def test_stale_epoch_delta_rejected(ds, tmp_path):
+    """A delta recorded before a compaction must not replay onto the
+    compacted base — the tail layout it describes no longer exists."""
+    b = _stream("stream_ivf", ds)
+    b.insert(_new_vecs(np.random.default_rng(7), 8, ds.base.shape[1]))
+    stale = b.to_delta_dict()
+    b.compact()
+    path = str(tmp_path / "idx.ckpt")
+    ckpt.save_index(path, b)
+    b.to_delta_dict = lambda: stale
+    ckpt.save_index_delta(path, b)
+    with pytest.raises(ValueError, match="epoch"):
+        ckpt.load_index(path)
+
+
+# ---------------------------------------------------------------------------
+# format fail-fast: one shared check, three artifact kinds (satellite)
+# ---------------------------------------------------------------------------
+
+def _expect_format_error(fn, *, kind, found):
+    """Every versioned artifact fails the same way: a typed
+    ArtifactFormatError carrying (kind, found, supported), message naming
+    both numbers via the shared 'newer than' phrasing."""
+    with pytest.raises(ckpt.ArtifactFormatError, match="newer") as ei:
+        fn()
+    err = ei.value
+    assert err.kind == kind
+    assert err.found == found
+    assert err.supported < found
+    assert str(err.supported) in str(err)
+
+
+def test_future_base_state_format_fails_fast(ds, tmp_path):
+    b = _stream("stream_ivf", ds)
+    orig = b.to_state_dict()
+    b.to_state_dict = lambda: {**orig, "state_format": 99}
+    path = str(tmp_path / "future.ckpt")
+    ckpt.save_index(path, b)
+    _expect_format_error(lambda: ckpt.load_index(path),
+                         kind="state", found=99)
+    with pytest.raises(ValueError, match="state format 99"):
+        ckpt.load_index(path)      # and it is still a plain ValueError
+
+
+def test_future_delta_format_fails_fast(ds, tmp_path, monkeypatch):
+    from repro.ckpt import index_io
+    b = _stream("stream_ivf", ds)
+    path = str(tmp_path / "idx.ckpt")
+    ckpt.save_index(path, b)
+    b.insert(_new_vecs(np.random.default_rng(8), 4, ds.base.shape[1]))
+    with monkeypatch.context() as mp:
+        mp.setattr(index_io, "DELTA_FORMAT", 99)
+        ckpt.save_index_delta(path, b)
+    _expect_format_error(lambda: ckpt.load_index(path),
+                         kind="delta", found=99)
+
+
+def test_future_frontier_format_fails_fast(tmp_path):
+    from repro.anns.tune.frontier import FRONTIER_FORMAT
+    fr = frontier_from_points(
+        [OperatingPoint(backend="ivf", params=SearchParams(k=10, ef=16),
+                        recall=0.9, qps=100.0)],
+        dataset="sift-128-euclidean", n_base=10, n_query=1, k=10)
+    path = str(tmp_path / "frontier.json")
+    ckpt.save_frontier(path, fr)
+    payload = json.load(open(path))
+    payload["frontier_format"] = FRONTIER_FORMAT + 1
+    json.dump(payload, open(path, "w"))
+    _expect_format_error(lambda: ckpt.load_frontier(path),
+                         kind="frontier", found=FRONTIER_FORMAT + 1)
+
+
+# ---------------------------------------------------------------------------
+# mutation guardrails
+# ---------------------------------------------------------------------------
+
+def test_delta_tail_full_raises_then_compact_frees(ds):
+    b = _stream("stream_ivf", ds, tail_cap=16)
+    rng = np.random.default_rng(9)
+    b.insert(_new_vecs(rng, 12, ds.base.shape[1]))
+    with pytest.raises(DeltaTailFull) as ei:
+        b.insert(_new_vecs(rng, 8, ds.base.shape[1]))
+    assert ei.value.free == 4
+    b.compact()
+    b.insert(_new_vecs(rng, 8, ds.base.shape[1]))   # tail drained
+    assert b.n_live() == N_BASE + 20
+
+
+def test_insert_id_collisions_rejected(ds):
+    b = _stream("stream_ivf", ds)
+    x = _new_vecs(np.random.default_rng(10), 2, ds.base.shape[1])
+    with pytest.raises(ValueError, match="already live"):
+        b.insert(x, ids=[0, N_BASE + 1])          # 0 is a live base id
+    with pytest.raises(ValueError, match="duplicate"):
+        b.insert(x, ids=[N_BASE + 1, N_BASE + 1])
+    assert b.n_live() == N_BASE                   # failed inserts are no-ops
+
+
+# ---------------------------------------------------------------------------
+# sharded streaming stays equivalent to single-device streaming
+# ---------------------------------------------------------------------------
+
+def test_stream_sharded_matches_stream_ivf_through_lifecycle(ds):
+    """The family invariant (sharded == ivf, same cells probed) must
+    survive mutation: same seed, same history -> identical results at
+    every stage, pre- and post-compaction."""
+    a = _stream("stream_ivf", ds)
+    s = _stream("stream_sharded", ds)
+    for stage in ("fresh", "mutated", "compacted"):
+        if stage == "mutated":
+            _mutate(a, seed=11), _mutate(s, seed=11)
+        elif stage == "compacted":
+            a.compact(), s.compact()
+        for ef in (16, 64):
+            ra = a.search(ds.queries, SearchParams(k=10, ef=ef))
+            rs = s.search(ds.queries, SearchParams(k=10, ef=ef))
+            np.testing.assert_array_equal(
+                np.asarray(ra.ids), np.asarray(rs.ids),
+                err_msg=f"stage={stage} ef={ef}")
+
+
+# ---------------------------------------------------------------------------
+# satellite: ivf_stats degenerate layouts
+# ---------------------------------------------------------------------------
+
+def test_ivf_stats_survives_degenerate_layouts(ds):
+    b = _stream("stream_ivf", ds, tail_cap=8)
+    b.delete(np.arange(N_BASE - 1))   # one survivor
+    b.compact()
+    st = ivf_stats(b.index)
+    # one survivor across nlist cells: max/mean skew is exactly nlist
+    assert st["n"] == 1
+    assert st["cell_skew"] == pytest.approx(float(b.index.nlist))
+    assert np.isfinite(st["pad_overhead"])
+    b.delete(b.live_vectors()[1])     # now fully empty
+    b.compact()
+    # an all-dead compact keeps one masked dummy row (the layout needs a
+    # vector); stats must stay finite and search must return nothing
+    assert b.n_live() == 0
+    st = ivf_stats(b.index)
+    assert st["n"] == 1 and np.isfinite(st["cell_skew"])
+    res = b.search(ds.queries[:2], SearchParams(k=5))
+    assert (np.asarray(res.ids) == -1).all()      # nothing live to return
+
+
+def test_ivf_stats_single_cell():
+    x = np.random.default_rng(12).standard_normal((64, 16)).astype(np.float32)
+    idx = build_ivf(x, nlist=1, kmeans_iters=1)
+    st = ivf_stats(idx)
+    assert st["cell_skew"] == pytest.approx(1.0)
+    assert st["empty_cells"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: server re-reads live size across mutations
+# ---------------------------------------------------------------------------
+
+def test_server_index_size_tracks_mutations(ds):
+    from repro.runtime.server import AnnsServer
+    b = _stream("stream_ivf", ds)
+    srv = AnnsServer(b, params=SearchParams(k=10, ef=16), max_batch=8)
+    assert srv._index_size() == N_BASE
+    b.insert(_new_vecs(np.random.default_rng(13), 6, ds.base.shape[1]))
+    b.delete(np.arange(4))
+    assert srv._index_size() == b.n_live() == N_BASE + 2
+
+
+# ---------------------------------------------------------------------------
+# drift monitor
+# ---------------------------------------------------------------------------
+
+def _point(recall=0.9, ef=32, qps=100.0):
+    return OperatingPoint(backend="stream_ivf",
+                          params=SearchParams(k=10, ef=ef),
+                          recall=recall, qps=qps)
+
+
+def test_drift_monitor_waits_for_min_observations():
+    m = DriftMonitor(_point(0.9), recall_margin=0.02, min_observations=3)
+    assert not m.observe(recall=0.5).triggered     # one unlucky window
+    assert not m.observe(recall=0.5).triggered
+    v = m.observe(recall=0.5)
+    assert v.triggered and v.reason == "recall_drift"
+    assert v.predicted_recall == pytest.approx(0.9)
+    assert v.recall_ewma == pytest.approx(0.5)
+
+
+def test_drift_monitor_margin_absorbs_small_decay():
+    m = DriftMonitor(_point(0.9), recall_margin=0.05, alpha=0.1,
+                     min_observations=1)
+    for _ in range(10):
+        assert not m.observe(recall=0.87).triggered   # within margin
+    assert not m.observe(recall=0.7).triggered        # one bad window: EWMA
+    for _ in range(10):                               # still above the line
+        v = m.observe(recall=0.7)
+    assert v.triggered and v.reason == "recall_drift" # sustained decay isn't
+
+
+def test_drift_monitor_tail_trigger_is_immediate_and_wins():
+    m = DriftMonitor(_point(0.9), max_tail_frac=0.2, min_observations=3)
+    v = m.observe(recall=0.95, tail_fraction=0.3)   # first window, healthy
+    assert v.triggered and v.reason == "tail_frac"
+    # both conditions hot: tail wins (compaction is the cheaper fix)
+    m2 = DriftMonitor(_point(0.9), max_tail_frac=0.2, min_observations=1)
+    for _ in range(3):
+        v = m2.observe(recall=0.1, tail_fraction=0.5)
+    assert v.reason == "tail_frac"
+    assert "tail_frac" in v.describe()
+
+
+def test_drift_monitor_rebase_resets_history():
+    m = DriftMonitor(_point(0.9), min_observations=2)
+    m.observe(recall=0.1), m.observe(recall=0.1)
+    assert m.observe(recall=0.1).triggered
+    m.rebase(_point(0.6))
+    v = m.observe(recall=0.55)
+    assert not v.triggered and v.predicted_recall == pytest.approx(0.6)
+
+
+def test_drift_monitor_validates_knobs():
+    with pytest.raises(ValueError, match="alpha"):
+        DriftMonitor(_point(), alpha=0.0)
+    with pytest.raises(ValueError, match="alpha"):
+        DriftMonitor(_point(), alpha=1.5)
+    with pytest.raises(ValueError, match="recall_margin"):
+        DriftMonitor(_point(), recall_margin=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# ladder-local re-sweep
+# ---------------------------------------------------------------------------
+
+def _fake_measurer(recall_for):
+    calls = []
+
+    def measure(target, ds, params, repeats, build_seconds):
+        calls.append(params.ef)
+        return SimpleNamespace(recall=recall_for(params.ef),
+                               qps=1000.0 / params.ef, p50_ms=1.0,
+                               build_seconds=0.0, memory_bytes=0,
+                               device_memory_bytes=0)
+    return measure, calls
+
+
+@pytest.fixture(scope="module")
+def built(ds):
+    return _stream("stream_ivf", ds)
+
+
+def test_resweep_stays_local_when_slo_holds(built, ds):
+    ladder = list(search_ef_ladder(built))
+    i = len(ladder) // 2
+    measure, calls = _fake_measurer(lambda ef: 0.95)
+    pick, fr = resweep_and_choose(
+        built, ds, RecallSLO(0.5), _point(ef=ladder[i]),
+        measure_fn=measure)
+    assert sorted(calls) == ladder[i - 1: i + 2]   # neighbors only
+    assert pick.params.ef == ladder[i - 1]         # cheapest feasible rung
+    assert all(p.label == "retune" for p in fr.points)
+
+
+def test_resweep_widens_until_feasible_each_rung_once(built, ds):
+    ladder = list(search_ef_ladder(built))
+    measure, calls = _fake_measurer(
+        lambda ef: 0.95 if ef == ladder[-1] else 0.1)
+    pick, _ = resweep_and_choose(
+        built, ds, RecallSLO(0.9), _point(ef=ladder[0]), measure_fn=measure)
+    assert pick.params.ef == ladder[-1]            # had to walk to the top
+    assert sorted(calls) == ladder                 # full widening...
+    assert len(calls) == len(set(calls))           # ...no rung re-measured
+
+
+def test_resweep_raises_only_after_whole_ladder(built, ds):
+    ladder = list(search_ef_ladder(built))
+    measure, calls = _fake_measurer(lambda ef: 0.1)
+    with pytest.raises(InfeasibleSLO):
+        resweep_and_choose(built, ds, RecallSLO(0.99),
+                           _point(ef=ladder[len(ladder) // 2]),
+                           measure_fn=measure)
+    assert sorted(calls) == ladder
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: serve drives the whole drift episode
+# ---------------------------------------------------------------------------
+
+def test_serve_drift_episode_subprocess():
+    """Full loop in one subprocess: SLO pick -> tail growth triggers
+    compaction -> drifted queries drop the recall EWMA below the
+    frontier's prediction -> ladder-local re-sweep re-picks -> served
+    recall meets the SLO again."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--backend", "stream_ivf", "--dataset", "sift-128-euclidean",
+         "--n-base", "2500", "--n-query", "64", "--k", "10",
+         "--max-batch", "32", "--nlist", "16", "--tail-cap", "512",
+         "--tune", "--tune-ef-cap", "24", "--target-recall", "0.8",
+         "--drift-retune", "0.1", "--max-tail-frac", "0.1",
+         "--stream-demo", "400"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = r.stdout
+    assert "-> tail_frac" in out            # tail growth detected...
+    assert "drift: compacted" in out        # ...answered by compaction
+    assert "-> recall_drift" in out         # served recall fell below pick
+    assert re.search(r"drift: retune ef (\d+) -> (\d+)", out)
+    m = re.search(r"drift: post-retune recall=([0-9.]+) target=([0-9.]+)", out)
+    assert m, out[-2000:]
+    assert float(m.group(1)) >= float(m.group(2))
+    assert "slo restored" in out
