@@ -64,6 +64,25 @@ def round_ef(ef: int) -> int:
     return snap_to_ladder(ef, EF_LADDER, 128)
 
 
+def snap_down_to_ladder(value: int, ladder: tuple) -> int:
+    """Largest ladder rung <= value; ``value`` itself below the ladder.
+
+    The downward twin of :func:`snap_to_ladder`, for knobs bounded from
+    *above* by live state: clamping batched ``k`` to a mutable index's
+    ``n_live()`` must land on a rung, or every distinct live count mints
+    a fresh jit trace (``k`` is a static argname of every backend's
+    search).  Below the bottom rung the bound itself is returned — a
+    sub-rung index size is build identity, one trace total.
+    """
+    best = None
+    for v in ladder:
+        if v <= value:
+            best = v
+        else:
+            break
+    return best if best is not None else max(1, value)
+
+
 def round_steps(steps: int) -> int:
     """Smallest step-ladder rung >= steps (multiples of 256 past it)."""
     return snap_to_ladder(steps, STEP_LADDER, 256)

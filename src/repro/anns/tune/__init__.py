@@ -22,7 +22,7 @@ records; only an actual sweep touches the bench harness (its imports
 are deferred), so loading a frontier and choosing a point is cheap.
 """
 from repro.anns.tune.choose import (InfeasibleSLO, RecallSLO, choose,
-                                    feasible_points)
+                                    feasible_points, snap_point_for_backend)
 from repro.anns.tune.drift import (DriftMonitor, DriftVerdict,
                                    resweep_and_choose)
 from repro.anns.tune.frontier import (FRONTIER_FORMAT, Frontier,
@@ -37,6 +37,7 @@ __all__ = [
     "FRONTIER_FORMAT", "Frontier", "OperatingPoint", "dominates",
     "pareto_prune", "frontier_from_points", "replace_params",
     "RecallSLO", "InfeasibleSLO", "choose", "feasible_points",
+    "snap_point_for_backend",
     "DEFAULT_TUNE_BACKENDS", "sweep_frontier", "sweep_target",
     "frontier_from_curve",
     "DriftMonitor", "DriftVerdict", "resweep_and_choose",

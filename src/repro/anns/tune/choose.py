@@ -124,3 +124,22 @@ def _stable_argmax_qps(points) -> OperatingPoint:
         if best is None or p.qps > best.qps:
             best = p
     return best
+
+
+def snap_point_for_backend(point: OperatingPoint, backend) -> OperatingPoint:
+    """``point`` with its ``ef`` re-snapped onto ``backend``'s static
+    effort ladder.
+
+    Serving a pick must never mint a jit retrace bucket the sweep didn't
+    already compile: an off-ladder ``ef`` (e.g. a frontier swept by an
+    older ladder) snaps *up* — a wider beam can only help recall, and
+    the rung is a trace the server would compile anyway.  Shared by
+    ``AnnsServer`` (single pick) and the multi-tenant tier (one pick per
+    tenant through the same frontier).
+    """
+    from repro.anns.api import round_ef, search_ef_ladder
+    from repro.anns.tune.frontier import replace_params
+
+    if point.params.ef not in search_ef_ladder(backend):
+        point = replace_params(point, ef=round_ef(point.params.ef))
+    return point

@@ -43,9 +43,14 @@ class DriftVerdict:
     latency_ewma_ms: float = 0.0
     tail_fraction: float = 0.0
     predicted_recall: float = 0.0
+    #: which monitor produced this verdict — the multi-tenant tier runs
+    #: one DriftMonitor per tenant off one shared frontier, and a
+    #: verdict must say whose SLO it is about
+    name: str = ""
 
     def describe(self) -> str:
-        return (f"recall_ewma={self.recall_ewma:.3f} "
+        tag = f"[{self.name}] " if self.name else ""
+        return (f"{tag}recall_ewma={self.recall_ewma:.3f} "
                 f"(predicted {self.predicted_recall:.3f}) "
                 f"tail_frac={self.tail_fraction:.3f}"
                 + (f" -> {self.reason}" if self.triggered else ""))
@@ -67,12 +72,14 @@ class DriftMonitor:
     def __init__(self, point: OperatingPoint, *,
                  recall_margin: float = 0.02,
                  max_tail_frac: float | None = None,
-                 alpha: float = 0.3, min_observations: int = 3):
+                 alpha: float = 0.3, min_observations: int = 3,
+                 name: str = ""):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         if recall_margin < 0.0:
             raise ValueError(
                 f"recall_margin must be >= 0, got {recall_margin}")
+        self.name = str(name)
         self.recall_margin = float(recall_margin)
         self.max_tail_frac = (None if max_tail_frac is None
                               else float(max_tail_frac))
@@ -112,7 +119,8 @@ class DriftMonitor:
             recall_ewma=float(self.recall_ewma),
             latency_ewma_ms=float(self.latency_ewma_ms or 0.0),
             tail_fraction=float(tail_fraction),
-            predicted_recall=float(self.point.recall))
+            predicted_recall=float(self.point.recall),
+            name=self.name)
 
 
 def _nearest_rung(ladder, ef: int) -> int:

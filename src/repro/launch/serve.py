@@ -228,6 +228,209 @@ def _run_stream_drift_demo(server, target, ds, slo, args):
           f"{'slo restored' if post >= slo.target_recall else 'SLO NOT MET'}")
 
 
+def _run_async_tier(target, ds, frontier, args, ap):
+    """Serve through :class:`repro.serve.AsyncServeTier` (``--async``).
+
+    Single-tenant mode mirrors the closed-loop report (recall/QPS/p50/
+    p99) plus the queue-wait vs compute latency split only the async
+    tier can measure.  With ``--tenants`` it runs the scripted
+    multi-tenant episode instead (greppable ``serve:`` markers):
+    per-tenant frontier picks, a deterministic overload burst
+    (admissions happen before the serve loop starts, so exactly
+    ``max_queue`` are admitted and the rest get typed ``Overloaded``),
+    a graceful drain, then steady mixed traffic measuring each tenant's
+    recall against its own SLO through its named drift monitor.
+    """
+    import asyncio
+
+    import numpy as np
+    from repro.anns import SearchParams
+    from repro.serve import (AsyncServeTier, TenantSpec,
+                             attach_drift_monitors, parse_tenant_specs,
+                             resolve_tenants)
+
+    def warm_buckets(tenants):
+        # compile each tenant group's jit bucket before the measured
+        # episode — outside the tier, so telemetry records serving
+        # latency, not the one-time compile of a cold operating point
+        from repro.runtime.server import (execute_search_batch,
+                                          search_callable)
+        search = search_callable(target)
+        groups = {st.params for st in tenants.values()}
+        for params in groups:
+            execute_search_batch(search, ds.queries[:1], params,
+                                 max_batch=args.max_batch)
+        print(f"serve: warmed {len(groups)} jit bucket(s)")
+
+    max_queue = args.max_queue if args.max_queue is not None else 256
+    if args.tenants is not None:
+        try:
+            specs = parse_tenant_specs(args.tenants)
+        except ValueError as e:
+            ap.error(str(e))
+        if args.k != frontier.k:
+            ap.error(f"frontier operating points were swept at "
+                     f"k={frontier.k}; serve with --k {frontier.k} or "
+                     f"re-sweep with --tune")
+        tenants = resolve_tenants(specs, target=target, frontier=frontier)
+        margin = args.drift_retune if args.drift_retune is not None else 0.05
+        attach_drift_monitors(tenants, recall_margin=margin,
+                              max_tail_frac=args.max_tail_frac)
+        for name in sorted(tenants):
+            st = tenants[name]
+            extra = ("" if st.spec.deadline_ms is None
+                     else f" deadline_ms={st.spec.deadline_ms:g}")
+            print(f"serve: tenant {name} pick ef={st.params.ef} "
+                  f"k={st.params.k} weight={st.spec.weight:g}{extra} "
+                  f"(swept recall={st.point.recall:.3f} "
+                  f"qps={st.point.qps:.0f})")
+        warm_buckets(tenants)
+        tier = AsyncServeTier(target, tenants, max_batch=args.max_batch,
+                              max_queue=max_queue)
+        asyncio.run(_multitenant_episode(tier, ds, args, max_queue))
+        return
+
+    spec = TenantSpec("default", target_recall=args.target_recall,
+                      deadline_ms=args.deadline_ms)
+    if args.target_recall is not None:
+        tenants = resolve_tenants([spec], target=target, frontier=frontier)
+        st = tenants["default"]
+        print(f"slo pick [recall>={args.target_recall:.3f}]: "
+              f"backend={st.point.backend} ef={st.params.ef} "
+              f"k={st.params.k} (swept recall={st.point.recall:.3f} "
+              f"qps={st.point.qps:.0f})")
+    else:
+        tenants = resolve_tenants(
+            [spec], default_params=SearchParams(k=args.k, ef=args.ef))
+    warm_buckets(tenants)
+    tier = AsyncServeTier(target, tenants, max_batch=args.max_batch,
+                          max_queue=max_queue)
+
+    async def episode():
+        from repro.anns.datasets import recall_at_k
+        tier.start()
+        rng = np.random.default_rng(0)
+        order = rng.integers(0, len(ds.queries), size=args.n_requests)
+        t0 = time.time()
+        responses = []
+        # chunked open-loop submission: each chunk fits the admission
+        # bound, so a healthy run sheds nothing
+        for s in range(0, len(order), max_queue):
+            chunk = order[s:s + max_queue]
+            futs = [tier.submit(ds.queries[i], "default") for i in chunk]
+            responses.extend(await asyncio.gather(*futs))
+        dt = time.time() - t0
+        await tier.close(drain=True)
+        found = np.stack([r.ids for r in responses])
+        lat = np.array([r.latency_ms for r in responses])
+        rec = recall_at_k(found, ds.gt[order], args.k)
+        tot = tier.telemetry.totals()
+        snap = tier.telemetry.snapshot()
+        print(f"serve: async served {len(responses)} requests in "
+              f"{dt:.2f}s ({len(responses)/dt:,.0f} QPS) over "
+              f"{snap['queue']['batches']} batches "
+              f"(depth_max={snap['queue']['depth_max']})")
+        print(f"recall@{args.k}={rec:.3f}  "
+              f"latency p50={np.percentile(lat, 50):.1f}ms "
+              f"p99={np.percentile(lat, 99):.1f}ms")
+        print(f"serve: latency split queue-wait "
+              f"p95={tot.queue_wait.quantile(0.95):.1f}ms compute "
+              f"p95={tot.compute.quantile(0.95):.1f}ms")
+
+    asyncio.run(episode())
+
+
+async def _multitenant_episode(tier, ds, args, max_queue):
+    """The scripted multi-tenant load episode (``serve:`` markers)."""
+    import asyncio
+
+    import numpy as np
+    from repro.anns.datasets import recall_at_k
+    from repro.serve import Overloaded, ServeRejection
+
+    names = sorted(tier.tenants)
+    k = args.k
+
+    # phase 1 — overload burst: submissions happen *before* the serve
+    # loop starts, so admission is deterministic — exactly max_queue
+    # admitted, the rest typed Overloaded
+    rng = np.random.default_rng(1)
+    futs, shed = [], 0
+    for i in range(3 * max_queue):
+        name = names[i % len(names)]
+        q = ds.queries[int(rng.integers(0, len(ds.queries)))]
+        try:
+            futs.append(tier.submit(q, name))
+        except Overloaded:
+            shed += 1
+    print(f"serve: overload burst admitted={len(futs)} shed={shed} "
+          f"(typed Overloaded)")
+    tier.start()
+    res = await asyncio.gather(*futs, return_exceptions=True)
+    ok = [r for r in res if not isinstance(r, BaseException)]
+    expired = [r for r in res if isinstance(r, ServeRejection)]
+    if ok:
+        lat = np.array([r.latency_ms for r in ok])
+        print(f"serve: burst drained served={len(ok)} "
+              f"shed_deadline={len(expired)} "
+              f"p50={np.percentile(lat, 50):.1f}ms "
+              f"p99={np.percentile(lat, 99):.1f}ms")
+
+    # phase 2 — steady mixed traffic: every tenant sees the full query
+    # set, interleaved window by window so batches contend, and each
+    # tenant's recall is measured against its own SLO
+    W = max(1, max_queue // len(names))
+    found = {n: [] for n in names}
+    lats = {n: [] for n in names}
+    for s in range(0, len(ds.queries), W):
+        qs = ds.queries[s:s + W]
+        window = [(n, tier.submit(q, n)) for q in qs for n in names]
+        for name, fut in window:
+            try:
+                r = await fut
+            except ServeRejection:
+                continue
+            found[name].append(r.ids)
+            lats[name].append(r.latency_ms)
+    tail_fraction = getattr(tier.batcher.target, "tail_fraction",
+                            lambda: 0.0)()
+    all_ok = True
+    for name in names:
+        st = tier.tenants[name]
+        n_ok = len(found[name])
+        rec = recall_at_k(np.stack(found[name]), ds.gt[:n_ok], k)
+        p50 = float(np.percentile(lats[name], 50))
+        verdict = tier.batcher.observe_served(
+            name, recall=rec, latency_ms=p50, tail_fraction=tail_fraction)
+        ok_slo = rec >= st.spec.target_recall
+        all_ok = all_ok and ok_slo
+        print(f"serve: tenant {name} recall={rec:.3f} "
+              f"target={st.spec.target_recall:.3f} "
+              f"{'ok' if ok_slo else 'MISS'} p50={p50:.1f}ms "
+              f"served={n_ok}/{len(ds.queries)}"
+              + (f" drift={verdict.describe()}"
+                 if verdict is not None and verdict.triggered else ""))
+
+    # phase 3 — graceful shutdown: stop admitting, serve everything
+    # already in the queue, account for every request
+    await tier.close(drain=True)
+    tot = tier.telemetry.totals()
+    snap = tier.telemetry.snapshot()
+    print(f"serve: closed served={tot.served} "
+          f"shed_overload={tot.shed_overload} "
+          f"shed_deadline={tot.shed_deadline} "
+          f"shed_closed={tot.shed_closed} "
+          f"depth_max={snap['queue']['depth_max']} "
+          f"batches={snap['queue']['batches']}")
+    print(f"serve: accounting {'ok' if tot.accounted() else 'BROKEN'} "
+          f"(admitted={tot.admitted} == "
+          f"served+shed_deadline+shed_closed)")
+    print(f"serve: latency split queue-wait "
+          f"p95={tot.queue_wait.quantile(0.95):.1f}ms compute "
+          f"p95={tot.compute.quantile(0.95):.1f}ms")
+    print(f"serve: episode {'ok' if all_ok else 'SLO MISS'}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sift-128-euclidean")
@@ -295,6 +498,24 @@ def main():
                          "N drifted vectors, compact on the tail trigger, "
                          "re-tune on the recall trigger (needs a "
                          "streaming backend + SLO mode + both drift flags)")
+    # -- async serving tier (repro.serve) --------------------------------
+    ap.add_argument("--async", dest="async_tier", action="store_true",
+                    help="serve through the asyncio continuous-batching "
+                         "tier (repro.serve) instead of the closed-loop "
+                         "AnnsServer")
+    ap.add_argument("--tenants", default=None, metavar="SPEC",
+                    help="multi-tenant episode: comma-separated "
+                         "name:recall[:weight[:deadline_ms]] traffic "
+                         "classes, each resolved to its own frontier pick "
+                         "(needs --async and --tune/--load-frontier)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="async admission-queue depth bound (default "
+                         "256); excess submissions are rejected with "
+                         "typed Overloaded, never silently dropped")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="async default per-request deadline; requests "
+                         "that expire while queued are shed with "
+                         "DeadlineExceeded")
     args = ap.parse_args()
 
     if args.tune and args.load_frontier:
@@ -310,15 +531,35 @@ def main():
         ap.error("--memory-budget-mb only constrains an SLO pick; add "
                  "--target-recall")
     if ((args.drift_retune is not None or args.max_tail_frac is not None)
-            and args.target_recall is None):
+            and args.target_recall is None and args.tenants is None):
         ap.error("drift monitoring compares served recall against an SLO "
-                 "pick; --drift-retune/--max-tail-frac need --target-recall")
+                 "pick; --drift-retune/--max-tail-frac need "
+                 "--target-recall (or --tenants, which carries per-tenant "
+                 "targets)")
     if args.stream_demo is not None:
         if args.stream_demo < 1:
             ap.error("--stream-demo needs a positive vector count")
         if args.drift_retune is None or args.max_tail_frac is None:
             ap.error("--stream-demo exercises both triggers; set "
                      "--drift-retune MARGIN and --max-tail-frac FRAC")
+    if args.tenants is not None and not args.async_tier:
+        ap.error("--tenants configures the async tier; add --async")
+    if args.tenants is not None and args.target_recall is not None:
+        ap.error("--tenants carries per-tenant recall targets "
+                 "(name:recall[:weight[:deadline_ms]]); drop "
+                 "--target-recall")
+    if args.tenants is not None and not (args.tune or args.load_frontier):
+        ap.error("per-tenant SLOs resolve through a frontier: add --tune "
+                 "(sweep now) or --load-frontier FILE")
+    if args.max_queue is not None and not args.async_tier:
+        ap.error("--max-queue bounds the async admission queue; add "
+                 "--async")
+    if args.deadline_ms is not None and not args.async_tier:
+        ap.error("--deadline-ms sets the async tier's default deadline; "
+                 "add --async")
+    if args.async_tier and args.stream_demo is not None:
+        ap.error("--stream-demo drives the closed-loop AnnsServer; drop "
+                 "--async")
 
     import dataclasses
 
@@ -412,6 +653,15 @@ def main():
     if args.save_frontier and frontier is not None:
         ckpt.save_frontier(args.save_frontier, frontier)
         print(f"frontier saved to {args.save_frontier}")
+
+    if args.async_tier:
+        if (args.target_recall is not None and frontier is not None
+                and args.k != frontier.k):
+            ap.error(f"frontier operating points were swept at "
+                     f"k={frontier.k}; serve with --k {frontier.k} or "
+                     f"re-sweep with --tune")
+        _run_async_tier(target, ds, frontier, args, ap)
+        return
 
     if args.target_recall is not None:
         from repro.anns.tune import RecallSLO

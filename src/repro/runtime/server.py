@@ -5,6 +5,13 @@ coalesced up to ``max_batch`` (padding to the jitted batch shape so one
 compiled search serves any load level), the paper's "batch processing
 amortises memory access" refinement at the serving layer.
 
+The batch-forming core — query validation, the ladder-snapped batch-``k``
+policy, and the pad-search-slice execution step — lives in module
+functions (:func:`validate_query`, :func:`batch_k_policy`,
+:func:`execute_search_batch`) shared with the async multi-tenant tier
+(:mod:`repro.serve.scheduler`), so both serving fronts form bit-identical
+batches against the same jit buckets.
+
 ``GenerateServer`` — prefill+decode service for the policy LM (the shape
 the ``decode_*`` dry-run cells lower).
 """
@@ -17,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.anns.api import SearchParams, round_ef, search_ef_ladder
+from repro.anns.api import (EF_LADDER, SearchParams, round_ef,
+                            snap_down_to_ladder)
 from repro.anns.engine import Engine
 
 
@@ -33,6 +41,120 @@ class AnnsResponse:
     ids: np.ndarray
     dists: np.ndarray
     latency_ms: float
+
+
+# ---------------------------------------------------------------------------
+# batch-forming core (shared with repro.serve.scheduler)
+# ---------------------------------------------------------------------------
+
+def search_callable(target):
+    """The batched-search entry point of an Engine facade or a bare
+    AnnsIndex backend."""
+    return target.query if isinstance(target, Engine) else target.search
+
+
+def index_size(target) -> int | None:
+    """Vectors currently searchable on ``target`` (Engine or backend).
+
+    Re-read per batch, never cached: a streaming backend mutates
+    mid-session, so a size captured at construction would clamp ``k``
+    against stale ``n``.
+    """
+    idx = getattr(target, "index", None)
+    if idx is None:
+        return None
+    backend = target.backend if isinstance(target, Engine) else target
+    n_live = getattr(backend, "n_live", None)   # mutable backends
+    if callable(n_live):
+        return int(n_live())
+    n = getattr(idx, "n", None)                 # GraphIndex / IvfIndex
+    if n is not None:
+        return int(n)
+    shape = getattr(idx, "shape", None)         # raw base matrix
+    return int(shape[0]) if shape else None
+
+
+def index_dim(target) -> int | None:
+    """Vector dimensionality of ``target``'s built index, or None when
+    nothing is built yet (validation then falls back to shape checks
+    only)."""
+    idx = getattr(target, "index", None)
+    if idx is None:
+        return None
+    for attr in ("base", "centroids"):          # graph/ivf, sharded
+        arr = getattr(idx, attr, None)
+        if arr is not None and getattr(arr, "ndim", 0) >= 2:
+            return int(arr.shape[-1])
+    shape = getattr(idx, "shape", None)         # raw base matrix
+    return int(shape[1]) if shape and len(shape) == 2 else None
+
+
+def validate_query(query, dim: int | None = None) -> np.ndarray:
+    """Fail fast on a malformed query at submit time.
+
+    A wrong shape or dtype used to surface only inside ``flush`` as an
+    opaque ``np.stack`` / dtype-cast crash, long after the caller's
+    frame was gone.  Accepted: a 1-D numeric ``(d,)`` vector whose ``d``
+    matches the index dimensionality (when an index is built).
+    """
+    q = np.asarray(query)
+    if q.dtype == object or not np.issubdtype(q.dtype, np.number):
+        raise TypeError(
+            f"query dtype {q.dtype} is not numeric — pass a float "
+            f"vector (it is cast to float32 at batch time)")
+    if q.ndim != 1:
+        hint = (" (a single-row matrix: pass query[0])"
+                if q.ndim == 2 and q.shape[0] == 1 else "")
+        raise ValueError(
+            f"query must be a 1-D (d,) vector, got shape {q.shape}{hint}")
+    if dim is not None and q.shape[0] != dim:
+        raise ValueError(
+            f"query has dim {q.shape[0]} but the index holds "
+            f"{dim}-dimensional vectors")
+    return q
+
+
+def batch_k_policy(k_default: int, kmax: int, n: int | None) -> int:
+    """The ``k`` one batch is searched at, always on the static ladder.
+
+    Heterogeneous-k traffic searches at the largest requested ``k``
+    (rounded up onto :data:`~repro.anns.api.EF_LADDER` so mixed loads
+    reuse compiled traces); an index holding fewer than that many
+    vectors clamps the result, and the clamp snaps *down* onto the
+    ladder — a raw ``min(k, n)`` lands off-ladder and mints a fresh jit
+    trace per distinct live ``n`` on mutable backends.
+    """
+    k = k_default if kmax <= k_default else round_ef(kmax)
+    if n is not None and k > n:
+        k = snap_down_to_ladder(n, EF_LADDER)
+    return max(1, k)
+
+
+def execute_search_batch(search_fn, queries: np.ndarray,
+                         params: SearchParams, *, max_batch: int):
+    """Pad one (b, d) query block to the jitted ``max_batch`` shape, run
+    the batched search, and block until results are ready.
+
+    Returns ``(ids, dists, compute_s)`` with the pad rows already sliced
+    off — ``compute_s`` is the wall-clock of the search itself, the
+    number the queue-wait/compute latency split is built from.
+    """
+    b, d = queries.shape
+    if b > max_batch:
+        raise ValueError(f"batch of {b} exceeds max_batch={max_batch}")
+    padded = queries.astype(np.float32, copy=False)
+    if b < max_batch:
+        padded = np.concatenate(
+            [padded, np.zeros((max_batch - b, d), np.float32)], axis=0)
+    t0 = time.perf_counter()
+    res = search_fn(padded, params)
+    jax.block_until_ready(res.ids)
+    compute_s = time.perf_counter() - t0
+    # slice the pad rows off on the host: slicing the device array would
+    # dispatch (and on first use, compile) a lax.slice per distinct b,
+    # stalling the serve loop ~tens of ms whenever a new partial-batch
+    # size shows up under load
+    return (np.asarray(res.ids)[:b], np.asarray(res.dists)[:b], compute_s)
 
 
 class AnnsServer:
@@ -88,15 +210,9 @@ class AnnsServer:
 
     def _snap_point(self, point):
         """``ef`` re-snapped onto the served backend's static ladder."""
-        from repro.anns.tune import replace_params
+        from repro.anns.tune import snap_point_for_backend
 
-        ef = point.params.ef
-        if ef not in search_ef_ladder(self.backend):
-            # off-ladder ef (e.g. a frontier swept by an older ladder):
-            # snap up — a wider beam can only help recall, and the rung
-            # is a trace the server would compile anyway
-            point = replace_params(point, ef=round_ef(ef))
-        return point
+        return snap_point_for_backend(point, self.backend)
 
     def _pick(self, slo, frontier):
         """Constrained choice restricted to the served backend, ef
@@ -149,58 +265,38 @@ class AnnsServer:
             k = self.params.k
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
-        self.queue.append(AnnsRequest(query, k))
+        self.queue.append(AnnsRequest(validate_query(
+            query, index_dim(self.engine)), k))
 
     def _index_size(self) -> int | None:
-        idx = getattr(self.engine, "index", None)
-        if idx is None:
-            return None
-        # re-read every flush: a streaming backend mutates mid-session,
-        # so a size cached at construction would clamp k against stale N
-        n_live = getattr(self.backend, "n_live", None)  # mutable backends
-        if callable(n_live):
-            return int(n_live())
-        n = getattr(idx, "n", None)                 # GraphIndex
-        if n is not None:
-            return int(n)
-        shape = getattr(idx, "shape", None)         # raw base matrix
-        return int(shape[0]) if shape else None
-
-    def _pad(self, queries: np.ndarray) -> np.ndarray:
-        b = queries.shape[0]
-        if b == self.max_batch:
-            return queries
-        pad = np.zeros((self.max_batch - b, queries.shape[1]), queries.dtype)
-        return np.concatenate([queries, pad], axis=0)
+        return index_size(self.engine)
 
     def flush(self) -> list[AnnsResponse]:
         """Serve up to max_batch queued requests in one jitted search.
 
         The batch is searched at the *largest* k any request asked for
         (bucketed onto the static ladder so heterogeneous-k traffic reuses
-        compiled traces), then each response is sliced down to its own
-        ``r.k`` — a request may ask for more neighbors than the server
+        compiled traces, and ladder-clamped to the live index size —
+        :func:`batch_k_policy`), then each response is sliced down to its
+        own ``r.k`` — a request may ask for more neighbors than the server
         default without getting silently truncated results.
         """
         if not self.queue:
             return []
         batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
         queries = np.stack([r.query for r in batch]).astype(np.float32)
-        kmax = max(r.k for r in batch)
-        k_search = self.params.k if kmax <= self.params.k else round_ef(kmax)
-        n = self._index_size()
-        if n is not None:
-            k_search = min(k_search, n)   # an index holds at most n neighbors
-        search = (self.engine.query if isinstance(self.engine, Engine)
-                  else self.engine.search)      # bare AnnsIndex backend
-        res = search(self._pad(queries), self.params.replace(k=k_search))
-        jax.block_until_ready(res.ids)
+        k_search = batch_k_policy(self.params.k,
+                                  max(r.k for r in batch),
+                                  self._index_size())
+        ids, dists, _ = execute_search_batch(
+            search_callable(self.engine), queries,
+            self.params.replace(k=k_search), max_batch=self.max_batch)
         now = time.perf_counter()
         out = []
         for i, r in enumerate(batch):
             out.append(AnnsResponse(
-                ids=np.asarray(res.ids[i, : r.k]),
-                dists=np.asarray(res.dists[i, : r.k]),
+                ids=ids[i, : r.k],
+                dists=dists[i, : r.k],
                 latency_ms=1e3 * (now - r.t_submit)))
         self.served += len(batch)
         return out
@@ -215,7 +311,14 @@ class AnnsServer:
 
 
 class GenerateServer:
-    """Minimal continuous-batching text generation over the policy LM."""
+    """Static-batch text generation over the policy LM: one fixed (B, T)
+    prompt batch prefilled together and decoded in lockstep for
+    ``n_steps`` — requests neither join nor leave mid-flight, so a short
+    completion waits for the longest one in its batch.  (This is *not*
+    continuous batching; the real continuous batcher — requests
+    coalesced into in-flight compiled buckets as capacity frees up —
+    is the ANNS serving tier's
+    :class:`repro.serve.scheduler.ContinuousBatcher`.)"""
 
     def __init__(self, cfg, params, rt, *, batch: int, max_seq: int):
         from repro.models import model as model_lib

@@ -1,0 +1,39 @@
+"""The async serving tier: continuous batching in front of the backends.
+
+``repro.runtime.server.AnnsServer`` is the *closed-loop* server — one
+caller, explicit ``flush``.  This package is the *open-loop* tier that
+sits in front of the same backends under real load:
+
+- :mod:`repro.serve.queue` — bounded admission with **typed** rejection
+  (:class:`Overloaded` / :class:`DeadlineExceeded` /
+  :class:`ServerClosed`); never a silent drop.
+- :mod:`repro.serve.tenants` — per-tenant :class:`RecallSLO` classes
+  resolved through one shared frontier; stride-weighted scheduling.
+- :mod:`repro.serve.scheduler` — :class:`ContinuousBatcher` (batches
+  form the instant the previous one finishes, padded onto the existing
+  static jit buckets — no new retrace buckets under load) and
+  :class:`AsyncServeTier` (asyncio front door, graceful drain).
+- :mod:`repro.serve.telemetry` — p50/p95/p99 split queue-wait vs
+  compute, per-tenant recall/shed counters, queue-depth gauges.
+
+CLI: ``python -m repro.launch.serve --async --tenants strict:0.95:4,lax:0.85
+--tune`` runs a scripted multi-tenant load episode.
+"""
+from repro.serve.queue import (AdmissionQueue, DeadlineExceeded, Overloaded,
+                               ServeRejection, ServeRequest, ServeResponse,
+                               ServerClosed, Ticket)
+from repro.serve.scheduler import AsyncServeTier, ContinuousBatcher
+from repro.serve.telemetry import (LatencyHistogram, ServeTelemetry,
+                                   TenantStats)
+from repro.serve.tenants import (TenantSpec, TenantState,
+                                 attach_drift_monitors, parse_tenant_specs,
+                                 resolve_tenants)
+
+__all__ = [
+    "ServeRejection", "Overloaded", "DeadlineExceeded", "ServerClosed",
+    "Ticket", "ServeRequest", "ServeResponse", "AdmissionQueue",
+    "TenantSpec", "TenantState", "parse_tenant_specs", "resolve_tenants",
+    "attach_drift_monitors",
+    "ContinuousBatcher", "AsyncServeTier",
+    "LatencyHistogram", "TenantStats", "ServeTelemetry",
+]
