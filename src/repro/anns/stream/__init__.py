@@ -24,13 +24,26 @@ Because the tail is a fixed-shape array and tombstones are a fixed-shape
 mask, **mutations never retrace** the jitted search — only ``compact()``
 (which changes the base layout) compiles a new program.
 
+Compaction is two-phase and can run off the serving hot path: searches
+read one immutable view published by a single reference assignment (the
+seqno fence), ``prepare_compaction`` builds the replacement layout on
+whatever thread calls it, and ``commit_compaction`` swaps it in under
+the mutation lock, replaying the journal of mutations that landed
+meanwhile.  :class:`BackgroundCompactor` packages that lifecycle behind
+a drift verdict (tail trigger -> schedule, warm the post-swap program,
+swap, rebase the monitors).
+
 See :class:`repro.anns.api.MutableAnnsIndex` for the protocol and
 ``repro.anns.tune.drift`` for the serving-side drift monitor this
 subsystem feeds.
 """
-from repro.anns.stream.backends import (DeltaTailFull, StreamingIvfBackend,
+from repro.anns.stream.backends import (CompactionInFlight, DeltaTailFull,
+                                        PreparedCompaction, StaleCompaction,
+                                        StreamingIvfBackend,
                                         StreamingShardedBackend,
                                         exact_live_gt)
+from repro.anns.stream.compactor import BackgroundCompactor
 
-__all__ = ["DeltaTailFull", "StreamingIvfBackend",
+__all__ = ["BackgroundCompactor", "CompactionInFlight", "DeltaTailFull",
+           "PreparedCompaction", "StaleCompaction", "StreamingIvfBackend",
            "StreamingShardedBackend", "exact_live_gt"]

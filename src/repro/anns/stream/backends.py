@@ -25,6 +25,22 @@ Mutation contract (see :class:`repro.anns.api.MutableAnnsIndex`):
   compacts to the same bytes.  Bumps ``epoch``; deltas recorded against
   an older epoch no longer apply.
 
+Concurrency (the seqno fence): everything a jitted search consumes is
+bundled into one immutable :class:`_SearchView` published by a single
+reference assignment in ``_sync()``.  A search captures the view once
+at entry and never touches backend attributes again, so a concurrent
+mutation or compaction swap can never hand it a torn mix of old and new
+state — it completes against the snapshot it started on.  ``compact()``
+is two-phase: :meth:`_StreamCommon.prepare_compaction` snapshots the
+survivors under the mutation lock and builds the replacement layout
+*outside* it (a background worker — see
+:class:`repro.anns.stream.compactor.BackgroundCompactor` — can run this
+while serving continues), and :meth:`_StreamCommon.commit_compaction`
+re-takes the lock, verifies the epoch fence, installs the new layout,
+and replays the mutation journal that accumulated while the build ran.
+Synchronous ``compact()`` is exactly prepare+commit with an empty
+journal, so its bytes are unchanged.
+
 Checkpointing: ``to_state_dict`` extends the family format with tail
 leaves and packed tombstone bitmaps (``STATE_FORMAT`` bump; older
 read-only snapshots still load, coming up with fresh mutable state);
@@ -35,6 +51,7 @@ incremental checkpoints.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax.numpy as jnp
 import numpy as np
@@ -62,6 +79,54 @@ class DeltaTailFull(RuntimeError):
     def __init__(self, msg: str, *, free: int = 0):
         super().__init__(msg)
         self.free = int(free)
+
+
+class CompactionInFlight(RuntimeError):
+    """``prepare_compaction`` was called while a previous prepared
+    compaction has not been committed or abandoned — the mutation
+    journal can only track one pending swap."""
+
+
+class StaleCompaction(RuntimeError):
+    """``commit_compaction`` was handed a prepared layout whose epoch
+    fence no longer matches the backend (another compaction committed
+    in between, or nothing is in flight).  The prepared state must be
+    discarded and prepared again."""
+
+
+class _SearchView:
+    """Immutable snapshot of everything one jitted search consumes.
+
+    Published by a single reference assignment (``self._view = ...``) —
+    that assignment *is* the seqno fence: a search captures the view
+    once at entry, so a concurrent ``_sync`` (mutation) or compaction
+    swap can never hand it base arrays from one epoch and tail/mask
+    arrays from another.
+    """
+
+    __slots__ = ("index", "live", "tail_vecs", "tail_live", "ids_ext",
+                 "seqno", "epoch")
+
+    def __init__(self, index, live, tail_vecs, tail_live, ids_ext,
+                 seqno: int, epoch: int):
+        self.index = index
+        self.live = live
+        self.tail_vecs = tail_vecs
+        self.tail_live = tail_live
+        self.ids_ext = ids_ext
+        self.seqno = int(seqno)
+        self.epoch = int(epoch)
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedCompaction:
+    """Replacement layout built off the hot path by
+    ``prepare_compaction`` plus the fence it was snapshotted under;
+    ``commit_compaction`` refuses it if the backend's epoch moved."""
+    index: object
+    epoch: int
+    seqno: int
+    empty: bool
 
 
 def _pack_mask(mask: np.ndarray) -> np.ndarray:
@@ -122,6 +187,17 @@ class _StreamCommon:
         cap = getattr(self.variant, "tail_cap", 0) or DEFAULT_TAIL_CAP
         return max(1, int(cap))
 
+    def _init_concurrency(self) -> None:
+        """Mutation lock + pending-compaction state; called from
+        ``__init__`` (before any build/restore can race)."""
+        self._lock = threading.RLock()
+        self._compacting = False
+        self._mutation_log: list[tuple] = []
+        self._view: _SearchView | None = None
+
+    def _tail_shape(self) -> tuple:
+        return self._tail_shape_for(self.index)
+
     def _init_mutable(self) -> None:
         """Fresh mutable state over the current built index (used after
         build() and when restoring a pre-streaming checkpoint)."""
@@ -150,15 +226,20 @@ class _StreamCommon:
 
     # -- MutableAnnsIndex protocol ----------------------------------------
     def n_live(self) -> int:
-        return int(self._live.sum()) + int(self._tail_live.sum())
+        with self._lock:
+            return int(self._live.sum()) + int(self._tail_live.sum())
 
     def tail_fraction(self) -> float:
-        return float(self._tail_live.sum()) / max(self.n_live(), 1)
+        with self._lock:
+            tail = int(self._tail_live.sum())
+            return tail / max(int(self._live.sum()) + tail, 1)
 
-    def delete(self, ids) -> int:
-        assert self.index is not None, "build() first"
+    def _apply_delete(self, ids_arr: np.ndarray) -> int:
+        """Tombstone one id batch against the current maps — no lock, no
+        seqno, no sync; the shared body of ``delete`` and journal
+        replay."""
         count = 0
-        for i in np.asarray(ids).reshape(-1).tolist():
+        for i in ids_arr.reshape(-1).tolist():
             i = int(i)
             p = self._id_pos.get(i)
             if p is not None and self._live[p]:
@@ -170,8 +251,17 @@ class _StreamCommon:
                 self._tail_live[s] = False
                 self._tail_ids[s] = -1
                 count += 1
-        self.seqno += 1
-        self._sync()
+        return count
+
+    def delete(self, ids) -> int:
+        assert self.index is not None, "build() first"
+        ids_arr = np.asarray(ids)
+        with self._lock:
+            if self._compacting:
+                self._mutation_log.append(("delete", ids_arr.copy()))
+            count = self._apply_delete(ids_arr)
+            self.seqno += 1
+            self._sync()
         return count
 
     def insert(self, vectors, ids=None) -> np.ndarray:
@@ -180,92 +270,184 @@ class _StreamCommon:
         if vecs.ndim == 1:
             vecs = vecs[None]
         m = len(vecs)
-        if ids is None:
-            ids = np.arange(self._next_id, self._next_id + m,
-                            dtype=np.int32)
-        ids = _check_insert_ids(ids, m)
-        for i in ids.tolist():
-            p = self._id_pos.get(int(i))
-            if (p is not None and self._live[p]) or int(i) in self._tail_pos:
-                raise ValueError(f"id {int(i)} is already live — delete it "
-                                 f"first or pick a fresh id")
-        self._place_in_tail(vecs, ids)     # validates capacity, then fills
-        self._next_id = max(self._next_id, int(ids.max()) + 1)
-        self.seqno += 1
-        self._sync()
+        with self._lock:
+            if ids is None:
+                ids = np.arange(self._next_id, self._next_id + m,
+                                dtype=np.int32)
+            ids = _check_insert_ids(ids, m)
+            for i in ids.tolist():
+                p = self._id_pos.get(int(i))
+                if ((p is not None and self._live[p])
+                        or int(i) in self._tail_pos):
+                    raise ValueError(
+                        f"id {int(i)} is already live — delete it "
+                        f"first or pick a fresh id")
+            self._place_in_tail(vecs, ids)  # validates capacity, then fills
+            if self._compacting:
+                self._mutation_log.append(("insert", vecs.copy(),
+                                           ids.copy()))
+            self._next_id = max(self._next_id, int(ids.max()) + 1)
+            self.seqno += 1
+            self._sync()
         return ids
 
     def compact(self) -> None:
         """Fold tail + tombstones into a fresh cell-major layout against
         the existing centroids; see the module docstring.  An all-dead
         index keeps a single masked dummy row (the layout needs >= 1
-        vector; it can never surface — its ``live`` bit stays False)."""
+        vector; it can never surface — its ``live`` bit stays False).
+
+        Synchronous form of the two-phase path: prepare + commit with
+        nothing able to land in the journal in between."""
+        self.commit_compaction(self.prepare_compaction())
+
+    def prepare_compaction(self) -> PreparedCompaction:
+        """Phase one: snapshot the survivors under the lock, then build
+        the replacement cell-major layout *outside* it — the expensive
+        half (assign, split, layout, id remap, re-shard/placement) that
+        a background worker runs while serving continues.  Mutations
+        that land meanwhile are journaled and replayed at commit."""
         assert self.index is not None, "build() first"
-        base, ids_arr = self._global_base()
-        live_pos = np.flatnonzero(self._live)
-        tail_slots = np.nonzero(self._tail_live)
-        vecs = np.concatenate(
-            [base[live_pos], self._tail_vecs[tail_slots]], axis=0)
-        oids = np.concatenate(
-            [ids_arr[live_pos], self._tail_ids[tail_slots]]).astype(np.int32)
-        empty = len(vecs) == 0
-        if empty:
-            vecs = np.zeros((1, base.shape[1]), np.float32)
-            oids = np.array([-1], np.int32)
-        centroids = np.asarray(self.index.centroids)
-        a, _ = assign(vecs, centroids, metric=self.metric)
-        max_cell = getattr(self.variant, "max_cell", 0) or None
-        if max_cell:
-            centroids, a = split_oversized(vecs, centroids, a, cap=max_cell)
-        inner = layout_from_assignments(vecs, a, centroids,
-                                        metric=self.metric)
-        # inner.ids maps positions -> rows of `vecs`; compose the
-        # surviving original ids on top
-        inner = dataclasses.replace(
-            inner, ids=jnp.asarray(oids[np.asarray(inner.ids)]))
-        self._install_compacted(inner)
-        self._live = np.ones(self.index.n, bool)
-        if empty:
-            self._live[:] = False
-        self._tail_vecs[:] = 0.0
-        self._tail_ids[:] = -1
-        self._tail_live[:] = False
-        self.epoch += 1
-        self.seqno += 1
-        self._rebuild_maps()
-        self._sync()
+        with self._lock:
+            if self._compacting:
+                raise CompactionInFlight(
+                    "a prepared compaction is already pending — commit "
+                    "or abandon it before preparing another")
+            index = self.index
+            vecs, oids = self.live_vectors()
+            fence_seqno, fence_epoch = self.seqno, self.epoch
+            self._compacting = True
+            self._mutation_log = []
+        try:
+            empty = len(vecs) == 0
+            if empty:
+                d = int(np.asarray(index.centroids).shape[1])
+                vecs = np.zeros((1, d), np.float32)
+                oids = np.array([-1], np.int32)
+            centroids = np.asarray(index.centroids)
+            a, _ = assign(vecs, centroids, metric=self.metric)
+            max_cell = getattr(self.variant, "max_cell", 0) or None
+            if max_cell:
+                centroids, a = split_oversized(vecs, centroids, a,
+                                               cap=max_cell)
+            inner = layout_from_assignments(vecs, a, centroids,
+                                            metric=self.metric)
+            # inner.ids maps positions -> rows of `vecs`; compose the
+            # surviving original ids on top
+            inner = dataclasses.replace(
+                inner, ids=jnp.asarray(oids[np.asarray(inner.ids)]))
+            return PreparedCompaction(
+                index=self._finalize_layout(inner), epoch=fence_epoch,
+                seqno=fence_seqno, empty=empty)
+        except BaseException:
+            with self._lock:
+                self._compacting = False
+                self._mutation_log = []
+            raise
+
+    def commit_compaction(self, prepared: PreparedCompaction) -> None:
+        """Phase two: the fenced swap.  Under the lock — so no search
+        can capture a half-installed view and no mutation can land
+        mid-swap — verify the epoch fence, install the prepared layout,
+        reset tail + tombstones, bump ``epoch``/``seqno``, and replay
+        the journal of mutations that arrived during the build (in
+        arrival order, so the replayed tail can never exceed the
+        capacity the originals respected)."""
+        with self._lock:
+            if not self._compacting:
+                raise StaleCompaction(
+                    "no compaction is in flight — the prepared state "
+                    "was already committed or abandoned")
+            if prepared.epoch != self.epoch:
+                self._compacting = False
+                self._mutation_log = []
+                raise StaleCompaction(
+                    f"prepared at epoch {prepared.epoch}, but the "
+                    f"backend is at epoch {self.epoch} — prepare again")
+            log, self._mutation_log = self._mutation_log, []
+            self._compacting = False
+            self.index = prepared.index
+            self._live = np.ones(self.index.n, bool)
+            if prepared.empty:
+                self._live[:] = False
+            # fresh arrays, NOT in-place zeroing: published views hold
+            # zero-copy jnp aliases of these buffers on CPU, and an
+            # in-flight search on the old epoch must keep seeing the
+            # tail vectors it captured
+            self._tail_vecs = np.zeros_like(self._tail_vecs)
+            self._tail_ids = np.full_like(self._tail_ids, -1)
+            self._tail_live = np.zeros_like(self._tail_live)
+            self.epoch += 1
+            self.seqno += 1
+            self._rebuild_maps()
+            for entry in log:
+                if entry[0] == "insert":
+                    _, vecs, ids = entry
+                    self._place_in_tail(vecs, ids)
+                else:
+                    self._apply_delete(entry[1])
+            self._sync()
 
     def live_vectors(self) -> tuple[np.ndarray, np.ndarray]:
         """(L, d) fp32 vectors + (L,) int32 ids of everything currently
         visible to search, base (cell-major order) then tail (slot
         order) — the exact-reference counterpart of one search."""
-        base, ids_arr = self._global_base()
-        live_pos = np.flatnonzero(self._live)
-        tail_slots = np.nonzero(self._tail_live)
-        vecs = np.concatenate(
-            [base[live_pos], self._tail_vecs[tail_slots]], axis=0)
-        ids = np.concatenate(
-            [ids_arr[live_pos], self._tail_ids[tail_slots]]).astype(np.int32)
+        with self._lock:
+            base, ids_arr = self._global_base()
+            live_pos = np.flatnonzero(self._live)
+            tail_slots = np.nonzero(self._tail_live)
+            vecs = np.concatenate(
+                [base[live_pos], self._tail_vecs[tail_slots]], axis=0)
+            ids = np.concatenate(
+                [ids_arr[live_pos],
+                 self._tail_ids[tail_slots]]).astype(np.int32)
         return vecs, ids
+
+    # -- warm-before-publish ----------------------------------------------
+    def warm_compacted(self, prepared: PreparedCompaction, queries,
+                       params: SearchParams) -> None:
+        """Compile (and run once) the search program the prepared layout
+        will serve after the swap, on the caller's thread — a background
+        compactor calls this right before ``commit_compaction`` so the
+        serving thread's first post-swap batch hits a warm jit cache
+        instead of paying the recompile stall inline.  Contents of the
+        throwaway view are irrelevant; only shapes/placement key the
+        cache, and they match the post-swap state exactly."""
+        import jax
+        res = self._search_view(self._fresh_view(prepared.index),
+                                queries, params)
+        jax.block_until_ready(res.ids)
+
+    def _fresh_view(self, index) -> _SearchView:
+        """A view over ``index`` with an all-live base and an empty tail
+        — the state ``commit_compaction`` publishes (pre-replay)."""
+        d = int(np.asarray(index.centroids).shape[1])
+        shape = self._tail_shape_for(index)
+        return self._make_view(index, np.ones(index.n, bool),
+                               np.zeros(shape + (d,), np.float32),
+                               np.full(shape, -1, np.int32),
+                               np.zeros(shape, bool), -1, -1)
 
     # -- mutable-state (de)serialization ----------------------------------
     def _mutable_leaves(self) -> dict:
-        leaves = {"live_bits": _pack_mask(self._live),
-                  "seqno": int(self.seqno), "epoch": int(self.epoch),
-                  "next_id": int(self._next_id),
-                  "tail_cap": int(self.tail_cap)}
-        leaves.update(self._tail_leaves())
+        with self._lock:
+            leaves = {"live_bits": _pack_mask(self._live),
+                      "seqno": int(self.seqno), "epoch": int(self.epoch),
+                      "next_id": int(self._next_id),
+                      "tail_cap": int(self.tail_cap)}
+            leaves.update(self._tail_leaves())
         return leaves
 
     def _restore_mutable(self, state: dict) -> None:
-        self.tail_cap = int(state.get("tail_cap", self.tail_cap))
-        self._live = _unpack_mask(state["live_bits"], (self.index.n,))
-        self._restore_tail_leaves(state)
-        self.seqno = int(state["seqno"])
-        self.epoch = int(state["epoch"])
-        self._next_id = int(state["next_id"])
-        self._rebuild_maps()
-        self._sync()
+        with self._lock:
+            self.tail_cap = int(state.get("tail_cap", self.tail_cap))
+            self._live = _unpack_mask(state["live_bits"], (self.index.n,))
+            self._restore_tail_leaves(state)
+            self.seqno = int(state["seqno"])
+            self.epoch = int(state["epoch"])
+            self._next_id = int(state["next_id"])
+            self._rebuild_maps()
+            self._sync()
 
     def to_delta_dict(self) -> dict:
         """Cumulative mutable-state snapshot since the base epoch: tail
@@ -304,8 +486,9 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
             variant = VariantConfig(backend=self.name)
         IvfBackend.__init__(self, variant, metric=metric, seed=seed)
         self.tail_cap = self._variant_tail_cap()
+        self._init_concurrency()
 
-    def _tail_shape(self) -> tuple:
+    def _tail_shape_for(self, index) -> tuple:
         return (self.tail_cap,)
 
     def _global_base(self):
@@ -317,8 +500,8 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
         self._init_mutable()
         return out
 
-    def _install_compacted(self, inner) -> None:
-        self.index = inner
+    def _finalize_layout(self, inner):
+        return inner
 
     def _place_in_tail(self, vecs: np.ndarray, ids: np.ndarray) -> None:
         free = np.flatnonzero(self._tail_ids < 0)
@@ -334,18 +517,31 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
         for s, i in zip(slots.tolist(), ids.tolist()):
             self._tail_pos[int(i)] = (int(s),)
 
+    def _make_view(self, index, live, tail_vecs, tail_ids, tail_live,
+                   seqno, epoch) -> _SearchView:
+        return _SearchView(index, jnp.asarray(live),
+                           jnp.asarray(tail_vecs), jnp.asarray(tail_live),
+                           jnp.concatenate([index.ids,
+                                            jnp.asarray(tail_ids)]),
+                           seqno, epoch)
+
     def _sync(self) -> None:
-        """Refresh the fixed-shape device mirrors the jitted search
-        consumes.  Shapes never change across mutations — no retrace."""
-        self._live_dev = jnp.asarray(self._live)
-        self._tail_vecs_dev = jnp.asarray(self._tail_vecs)
-        self._tail_live_dev = jnp.asarray(self._tail_live)
-        self._ids_ext = jnp.concatenate(
-            [self.index.ids, jnp.asarray(self._tail_ids)])
+        """Publish a fresh immutable view of the fixed-shape device
+        mirrors the jitted search consumes.  Shapes never change across
+        mutations — no retrace; the single reference assignment is the
+        fence concurrent searches read through."""
+        self._view = self._make_view(self.index, self._live,
+                                     self._tail_vecs, self._tail_ids,
+                                     self._tail_live, self.seqno,
+                                     self.epoch)
 
     def search(self, queries, params: SearchParams) -> SearchResult:
         assert self.index is not None, "build() first"
-        idx = self.index
+        return self._search_view(self._view, queries, params)
+
+    def _search_view(self, view: _SearchView, queries,
+                     params: SearchParams) -> SearchResult:
+        idx = view.index
         p = params.resolved(self.variant)
         # fixed output shape across mutations: clamp to the layout's
         # capacity (base rows + tail slots); short rows pad with id -1
@@ -359,8 +555,8 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
         quantized = True if params.quantized is None else bool(params.quantized)
         out_ids, out_d, scanned = stream_ivf_search(
             idx.centroids, idx.cells, idx.base, idx.base_q, idx.scales,
-            self._live_dev, self._tail_vecs_dev, self._tail_live_dev,
-            self._ids_ext, jnp.asarray(queries, jnp.float32),
+            view.live, view.tail_vecs, view.tail_live,
+            view.ids_ext, jnp.asarray(queries, jnp.float32),
             nprobe=nprobe, k=k, m=m, metric=self.metric, quantized=quantized)
         return SearchResult(ids=out_ids, dists=out_d, steps=nprobe,
                             expansions=scanned, backend=self.name)
@@ -423,9 +619,10 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
         ShardedBackend.__init__(self, variant, metric=metric, seed=seed)
         self.tail_cap = self._variant_tail_cap()
         self._mesh = None
+        self._init_concurrency()
 
-    def _tail_shape(self) -> tuple:
-        return (self.index.n_shards, self.tail_cap)
+    def _tail_shape_for(self, index) -> tuple:
+        return (index.n_shards, self.tail_cap)
 
     def _global_base(self):
         idx = self.index
@@ -440,10 +637,13 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
         self._init_mutable()
         return out
 
-    def _install_compacted(self, inner) -> None:
-        self.index = shard_ivf(inner, self.index.n_shards)
+    def _finalize_layout(self, inner):
+        """Re-shard + re-place happen in *prepare* (off the hot path):
+        they are the expensive, device-touching half of the swap."""
+        sharded = shard_ivf(inner, self.index.n_shards)
         if self._mesh is not None:
-            self.index = place_on_mesh(self.index, self._mesh)
+            sharded = place_on_mesh(sharded, self._mesh)
+        return sharded
 
     def place_on_mesh(self, mesh) -> None:
         ShardedBackend.place_on_mesh(self, mesh)
@@ -480,39 +680,46 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
             self._tail_live[j, s] = True
             self._tail_pos[int(ids[r])] = (j, s)
 
-    def _sync(self) -> None:
-        """Refresh fixed-shape device mirrors; when mesh-placed, the
-        mutable leaves are sharded along the same ``"shard"`` axis as
-        the base slices and ``ids_ext`` stays replicated."""
-        idx = self.index
-        vb = np.asarray(idx.vec_bounds)
-        npad = int(idx.base_q.shape[1])
-        live = np.zeros((idx.n_shards, npad), bool)
-        for j in range(idx.n_shards):
+    def _make_view(self, index, live_global, tail_vecs, tail_ids,
+                   tail_live, seqno, epoch) -> _SearchView:
+        """Device view over ``index``: the global live mask expands to
+        the per-shard padded layout; when mesh-placed, the mutable
+        leaves are sharded along the same ``"shard"`` axis as the base
+        slices and ``ids_ext`` stays replicated."""
+        vb = np.asarray(index.vec_bounds)
+        npad = int(index.base_q.shape[1])
+        live = np.zeros((index.n_shards, npad), bool)
+        for j in range(index.n_shards):
             v0, v1 = int(vb[j]), int(vb[j + 1])
-            live[j, : v1 - v0] = self._live[v0:v1]
+            live[j, : v1 - v0] = live_global[v0:v1]
         ids_ext = np.concatenate(
-            [np.asarray(idx.ids), self._tail_ids.reshape(-1)])
+            [np.asarray(index.ids), np.asarray(tail_ids).reshape(-1)])
         if self._mesh is None:
-            self._live_dev = jnp.asarray(live)
-            self._tail_vecs_dev = jnp.asarray(self._tail_vecs)
-            self._tail_live_dev = jnp.asarray(self._tail_live)
-            self._ids_ext = jnp.asarray(ids_ext)
-        else:
-            import jax
-            from jax.sharding import NamedSharding, PartitionSpec as P
+            return _SearchView(index, jnp.asarray(live),
+                               jnp.asarray(tail_vecs),
+                               jnp.asarray(tail_live),
+                               jnp.asarray(ids_ext), seqno, epoch)
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
-            def put(x, spec):
-                return jax.device_put(jnp.asarray(x),
-                                      NamedSharding(self._mesh, spec))
-            self._live_dev = put(live, P("shard", None))
-            self._tail_vecs_dev = put(self._tail_vecs,
-                                      P("shard", None, None))
-            self._tail_live_dev = put(self._tail_live, P("shard", None))
-            self._ids_ext = put(ids_ext, P())
+        def put(x, spec):
+            return jax.device_put(jnp.asarray(x),
+                                  NamedSharding(self._mesh, spec))
+        return _SearchView(index, put(live, P("shard", None)),
+                           put(tail_vecs, P("shard", None, None)),
+                           put(tail_live, P("shard", None)),
+                           put(ids_ext, P()), seqno, epoch)
 
-    def _invocation(self, queries, params: SearchParams):
-        idx = self.index
+    def _sync(self) -> None:
+        """Publish a fresh immutable view (see the ivf counterpart)."""
+        self._view = self._make_view(self.index, self._live,
+                                     self._tail_vecs, self._tail_ids,
+                                     self._tail_live, self.seqno,
+                                     self.epoch)
+
+    def _view_invocation(self, view: _SearchView, queries,
+                         params: SearchParams):
+        idx = view.index
         p = params.resolved(self.variant)
         k = min(p.k, idx.n + idx.n_shards * self.tail_cap)
         k_base = min(k, idx.n)
@@ -524,14 +731,29 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
         quantized = True if params.quantized is None else bool(params.quantized)
         args = (idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
                 idx.vec_start, idx.base_q, idx.scales, idx.base_f,
-                self._live_dev, self._tail_vecs_dev, self._tail_live_dev,
-                self._ids_ext, jnp.asarray(queries, jnp.float32))
+                view.live, view.tail_vecs, view.tail_live,
+                view.ids_ext, jnp.asarray(queries, jnp.float32))
         statics = dict(nprobe=nprobe, k=k, m=m, metric=self.metric,
                        quantized=quantized)
         return args, statics
 
+    def _invocation(self, queries, params: SearchParams):
+        return self._view_invocation(self._view, queries, params)
+
     def _search_fn(self):
         return self._placed_search or stream_sharded_search
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        assert self.index is not None, "build() first"
+        return self._search_view(self._view, queries, params)
+
+    def _search_view(self, view: _SearchView, queries,
+                     params: SearchParams) -> SearchResult:
+        args, statics = self._view_invocation(view, queries, params)
+        out_ids, out_d, scanned = self._search_fn()(*args, **statics)
+        return SearchResult(ids=out_ids, dists=out_d,
+                            steps=statics["nprobe"],
+                            expansions=scanned, backend=self.name)
 
     def memory_bytes(self) -> int:
         extra = 0

@@ -24,6 +24,7 @@ is injectable (``measure_fn``) exactly like
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from repro.anns.tune.choose import InfeasibleSLO, RecallSLO, choose
@@ -36,11 +37,16 @@ class DriftVerdict:
     """One :meth:`DriftMonitor.observe` outcome.  ``reason`` is
     ``"recall_drift"`` / ``"tail_frac"`` when ``triggered`` (tail wins
     when both fire — compaction is the cheaper fix and re-measuring
-    before it would tune against a layout about to change)."""
+    before it would tune against a layout about to change).
+
+    ``latency_ewma_ms`` is ``None`` until a latency sample has actually
+    been folded in — a monitor fed recall-only telemetry must not report
+    a fabricated 0.0 ms (which reads as "impossibly fast", not "not yet
+    measured") to dashboards or the serving driver."""
     triggered: bool
     reason: str = ""
     recall_ewma: float = 0.0
-    latency_ewma_ms: float = 0.0
+    latency_ewma_ms: float | None = None
     tail_fraction: float = 0.0
     predicted_recall: float = 0.0
     #: which monitor produced this verdict — the multi-tenant tier runs
@@ -50,8 +56,11 @@ class DriftVerdict:
 
     def describe(self) -> str:
         tag = f"[{self.name}] " if self.name else ""
+        lat = ("lat=n/a" if self.latency_ewma_ms is None
+               else f"lat={self.latency_ewma_ms:.1f}ms")
         return (f"{tag}recall_ewma={self.recall_ewma:.3f} "
                 f"(predicted {self.predicted_recall:.3f}) "
+                f"{lat} "
                 f"tail_frac={self.tail_fraction:.3f}"
                 + (f" -> {self.reason}" if self.triggered else ""))
 
@@ -85,6 +94,10 @@ class DriftMonitor:
                               else float(max_tail_frac))
         self.alpha = float(alpha)
         self.min_observations = int(min_observations)
+        #: set while a scheduled compaction is in flight (see
+        #: repro.anns.stream.BackgroundCompactor) — both triggers hold
+        #: their fire so the tail verdict can't re-fire mid-fix
+        self.compaction_pending = False
         self.rebase(point)
 
     def rebase(self, point: OperatingPoint) -> None:
@@ -96,19 +109,33 @@ class DriftMonitor:
         self.recall_ewma = None
         self.latency_ewma_ms = None
 
+    def compaction_started(self) -> None:
+        """A compaction answering the last tail verdict is in flight:
+        hold both triggers until it finishes — the tail verdict is
+        already being acted on, and a recall re-tune would measure a
+        layout about to be swapped out from under it."""
+        self.compaction_pending = True
+
+    def compaction_finished(self) -> None:
+        self.compaction_pending = False
+
     def _ewma(self, prev, x):
         return x if prev is None else (1 - self.alpha) * prev + self.alpha * x
 
     def observe(self, *, recall: float, latency_ms: float | None = None,
                 tail_fraction: float = 0.0) -> DriftVerdict:
-        """Fold one served window's telemetry in; returns the verdict."""
+        """Fold one served window's telemetry in; returns the verdict.
+        A NaN latency sample (an empty window's percentile) is dropped
+        rather than poisoning the EWMA forever."""
         self.n_observations += 1
         self.recall_ewma = self._ewma(self.recall_ewma, float(recall))
-        if latency_ms is not None:
+        if latency_ms is not None and not math.isnan(latency_ms):
             self.latency_ewma_ms = self._ewma(self.latency_ewma_ms,
                                               float(latency_ms))
         reason = ""
-        if (self.max_tail_frac is not None
+        if self.compaction_pending:
+            pass
+        elif (self.max_tail_frac is not None
                 and tail_fraction > self.max_tail_frac):
             reason = "tail_frac"
         elif (self.n_observations >= self.min_observations
@@ -117,7 +144,8 @@ class DriftMonitor:
         return DriftVerdict(
             triggered=bool(reason), reason=reason,
             recall_ewma=float(self.recall_ewma),
-            latency_ewma_ms=float(self.latency_ewma_ms or 0.0),
+            latency_ewma_ms=(None if self.latency_ewma_ms is None
+                             else float(self.latency_ewma_ms)),
             tail_fraction=float(tail_fraction),
             predicted_recall=float(self.point.recall),
             name=self.name)
@@ -173,9 +201,20 @@ def resweep_and_choose(target, ds, slo: RecallSLO,
                 memory_bytes=int(pt.memory_bytes),
                 device_memory_bytes=int(pt.device_memory_bytes),
                 label=label)
+        # stamp the artifact with the state it actually measured: a
+        # mutated target's live count + compaction epoch, not the build
+        # snapshot's len(ds.base) — the persisted frontier must identify
+        # which index state its recall/QPS numbers hold on
+        n_live_fn = getattr(target, "n_live", None)
+        n_measured = (int(n_live_fn()) if callable(n_live_fn)
+                      else len(ds.base))
+        meta = {"label": label, "n_live": n_measured}
+        epoch = getattr(target, "epoch", None)
+        if epoch is not None:
+            meta["epoch"] = int(epoch)
         frontier = frontier_from_points(
-            measured.values(), dataset=ds.spec.name, n_base=len(ds.base),
-            n_query=len(ds.queries), k=k, meta={"label": label})
+            measured.values(), dataset=ds.spec.name, n_base=n_measured,
+            n_query=len(ds.queries), k=k, meta=meta)
         try:
             pick = choose(frontier, slo,
                           backend=getattr(target, "name", None))

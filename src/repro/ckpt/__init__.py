@@ -2,9 +2,12 @@ from repro.ckpt.checkpoint import save_checkpoint, load_checkpoint
 from repro.ckpt.frontier_io import load_frontier, save_frontier
 from repro.ckpt.index_io import (load_index, save_index, save_index_delta)
 from repro.ckpt.manager import CheckpointManager
-from repro.ckpt.versioning import ArtifactFormatError, check_artifact_format
+from repro.ckpt.versioning import (ArtifactFormatError, StaleArtifactError,
+                                   check_artifact_age,
+                                   check_artifact_format)
 
 __all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
            "save_index", "load_index", "save_index_delta",
            "save_frontier", "load_frontier",
-           "ArtifactFormatError", "check_artifact_format"]
+           "ArtifactFormatError", "check_artifact_format",
+           "StaleArtifactError", "check_artifact_age"]

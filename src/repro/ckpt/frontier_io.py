@@ -14,11 +14,23 @@ and :func:`load_frontier` fails fast on anything newer.  Writes are
 atomic (tmp + ``os.replace``) and byte-deterministic (sorted keys,
 fixed separators): equal frontiers produce equal files, so CI artifact
 diffs mean something.
+
+Frontiers over *mutable* indexes additionally carry the mutation
+``epoch`` (and live vector count) they measured in ``meta`` —
+``resweep_and_choose`` stamps both.  A compaction re-lays the index
+out, so a frontier's measured recall/QPS silently stops holding one
+epoch later; :func:`load_frontier` enforces an age-out policy against
+the serving index's current epoch (refuse beyond ``max_epoch_age``,
+warn on any nonzero age) instead of letting a stale artifact pick the
+operating point.
 """
 from __future__ import annotations
 
 import json
 import os
+import warnings
+
+from repro.ckpt.versioning import StaleArtifactError, check_artifact_age
 
 
 def frontier_json(frontier) -> str:
@@ -37,11 +49,22 @@ def save_frontier(path: str, frontier) -> str:
     return path
 
 
-def load_frontier(path: str):
+def load_frontier(path: str, *, current_epoch: int | None = None,
+                  max_epoch_age: int = 0, stale_ok: bool = False):
     """Restore a :class:`repro.anns.tune.frontier.Frontier` from
     :func:`save_frontier` output.  Raises ``ValueError`` on a payload
     whose ``frontier_format`` is newer than this tuner understands, and
-    ``KeyError``-ish clarity when the file isn't a frontier at all."""
+    ``KeyError``-ish clarity when the file isn't a frontier at all.
+
+    ``current_epoch`` (the serving index's mutation epoch) switches the
+    age-out policy on: a frontier whose ``meta["epoch"]`` is more than
+    ``max_epoch_age`` compactions old raises
+    :class:`~repro.ckpt.versioning.StaleArtifactError` (downgraded to a
+    warning with ``stale_ok=True`` — the operator explicitly accepts
+    serving off stale measurements); a frontier within the allowance
+    but behind still warns.  Unstamped frontiers (swept on a read-only
+    build) have no age and always load.
+    """
     from repro.anns.tune.frontier import Frontier
 
     with open(path) as f:
@@ -50,4 +73,31 @@ def load_frontier(path: str):
         raise ValueError(
             f"{path!r} is not a frontier artifact (missing "
             f"'frontier_format'); expected save_frontier output")
-    return Frontier.from_json_dict(payload)
+    frontier = Frontier.from_json_dict(payload)
+    if current_epoch is not None:
+        found = frontier.meta.get("epoch")
+        hint = ("re-sweep against the live index "
+                "(resweep_and_choose / serve --tune) or pass "
+                "stale_ok to serve it anyway")
+        try:
+            age = check_artifact_age(
+                "frontier", found, current_epoch,
+                max_age=max_epoch_age, what=f"frontier {path!r}",
+                hint=hint)
+        except StaleArtifactError:
+            if not stale_ok:
+                raise
+            warnings.warn(
+                f"frontier {path!r} (epoch {found}) is stale for the "
+                f"index at epoch {current_epoch}; serving it anyway "
+                f"(stale_ok) — its measured recall/QPS may not hold",
+                stacklevel=2)
+        else:
+            if age is not None and age > 0:
+                warnings.warn(
+                    f"frontier {path!r} is {age} compaction(s) behind "
+                    f"the index (epoch {found} vs {current_epoch}); "
+                    f"within max_epoch_age={max_epoch_age} but its "
+                    f"numbers were measured on an older layout",
+                    stacklevel=2)
+    return frontier

@@ -40,6 +40,21 @@ increase and that each delta's ``epoch`` matches the base's — a delta
 recorded before a compaction cannot apply to the compacted base.
 Re-saving the base (``save_index`` overwrites the directory atomically)
 clears accumulated deltas by construction.
+
+Background compaction and the seqno fence: the streaming backends swap
+in a compacted layout atomically under their mutation lock
+(``commit_compaction`` — see ``repro.anns.stream.backends``), bumping
+``epoch`` and ``seqno`` together, and every search runs against an
+immutable view captured at entry.  The epoch-match validation above is
+the checkpoint-side half of that fence — ``save_index_delta`` called
+concurrently with a background compaction snapshots either the
+pre-swap state (old ``epoch``, applies to the old base) or the
+post-swap state (new ``epoch``, refused against the old base), never a
+torn mix.  The same epoch discipline governs swept-frontier artifacts:
+``ckpt.load_frontier(..., current_epoch=...)`` ages out frontiers
+whose ``meta["epoch"]`` predates the serving index's (a compaction
+re-lays the index out, so measured recall/QPS stop holding one epoch
+later).
 """
 from __future__ import annotations
 
@@ -91,6 +106,12 @@ def save_index_delta(path: str, backend, *, extra: dict | None = None) -> str:
     ``path/delta_<seqno zero-padded>`` so lexical directory order equals
     replay order.  Returns the delta directory path.  Writing a delta at
     a seqno that already exists overwrites it (same mutation state).
+
+    Safe to call while a :class:`~repro.anns.stream.BackgroundCompactor`
+    run is in flight: ``to_delta_dict`` snapshots under the backend's
+    mutation lock, so the delta carries a coherent (``seqno``,
+    ``epoch``) pair from one side of the fenced swap — replay-time
+    epoch validation then accepts it against the matching base only.
     """
     to_delta = getattr(backend, "to_delta_dict", None)
     if not callable(to_delta):

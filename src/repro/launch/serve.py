@@ -74,6 +74,26 @@ def _memory_line(target) -> str:
     return f"{total/1e6:.1f} MB resident"
 
 
+def served_recall(found_ids, served_indices, gt, k) -> float:
+    """Recall@k of the *served* subset of an episode: response ``i`` is
+    scored against the gt row of the query it actually answered.
+
+    The naive form — stack the accepted results and compare against
+    ``gt[:n_ok]`` — silently misattributes every response after a
+    mid-stream shed: one ``ServeRejection`` shifts all later rows onto
+    the wrong ground truth, corrupting the recall fed to the drift
+    monitors.  ``served_indices[i]`` is the original query index of
+    ``found_ids[i]``; NaN when nothing was served (a fully-shed tenant
+    has no measured recall, which is not 0.0).
+    """
+    import numpy as np
+    from repro.anns.datasets import recall_at_k
+    if not len(found_ids):
+        return float("nan")
+    gt_rows = np.asarray(gt)[np.asarray(list(served_indices), int)]
+    return recall_at_k(np.stack(found_ids), gt_rows, k)
+
+
 def _serve_window(server, queries, gt, k):
     """Push one query window through the server; returns (recall, p50 ms)."""
     import numpy as np
@@ -184,8 +204,18 @@ def _run_stream_drift_demo(server, target, ds, slo, args):
     v = server.observe_served(recall=rec, latency_ms=p50)
     print(f"drift: verdict {v.describe()}")
     if v.reason == "tail_frac":
-        target.compact()
-        server.drift_monitor.rebase(server.operating_point)
+        # the verdict scheduled a *background* compaction: the
+        # replacement layout builds on the compactor's worker while
+        # serving continues against the old epoch — prove it with a
+        # mid-flight window (the live set is swap-invariant, so its
+        # exact gt holds on both sides of the fence)
+        idx = rng.integers(0, len(ds.queries), size=window)
+        wq = ds.queries[idx]
+        rec, p50 = _serve_window(server, wq,
+                                 exact_live_gt(target, wq, k), k)
+        print(f"drift: served during compaction recall={rec:.3f} "
+              f"p50={p50:.1f}ms")
+        server.compactor.join()
         print(f"drift: compacted -> epoch {target.epoch}, "
               f"n_live={target.n_live()}, "
               f"tail_frac={target.tail_fraction():.3f}")
@@ -209,12 +239,23 @@ def _run_stream_drift_demo(server, target, ds, slo, args):
     # neighboring rungs, re-choose for the same SLO, adopt the pick
     live_ds = dataclasses.replace(ds, queries=dq, gt=dgt)
     old_ef = server.params.ef
-    point, _refront = resweep_and_choose(
+    point, refront = resweep_and_choose(
         target, live_ds, slo, server.operating_point, k=k,
         repeats=args.tune_repeats, label="retune")
     server.apply_operating_point(point)
     print(f"drift: retune ef {old_ef} -> {server.params.ef} "
           f"(swept recall={point.recall:.3f} qps={point.qps:.0f})")
+    if args.save_frontier:
+        # the re-swept frontier reflects the *live* state (epoch +
+        # n_live stamped in meta) — persist it over the build-time
+        # artifact so the shipped operating points describe the index
+        # actually being served
+        from repro import ckpt
+        ckpt.save_frontier(args.save_frontier, refront)
+        print(f"drift: re-swept frontier persisted to "
+              f"{args.save_frontier} (epoch "
+              f"{refront.meta.get('epoch')}, "
+              f"n_live={refront.meta.get('n_live')})")
     # phase C: served recall back above the SLO target
     recs = []
     for w in range(2):
@@ -287,6 +328,12 @@ def _run_async_tier(target, ds, frontier, args, ap):
         warm_buckets(tenants)
         tier = AsyncServeTier(target, tenants, max_batch=args.max_batch,
                               max_queue=max_queue)
+        from repro.anns.api import supports_mutation
+        if supports_mutation(target):
+            from repro.anns.stream import BackgroundCompactor
+            tier.attach_compactor(BackgroundCompactor(target))
+            print("serve: background compactor attached (tail verdicts "
+                  "schedule fenced swaps)")
         asyncio.run(_multitenant_episode(tier, ds, args, max_queue))
         return
 
@@ -345,7 +392,6 @@ async def _multitenant_episode(tier, ds, args, max_queue):
     import asyncio
 
     import numpy as np
-    from repro.anns.datasets import recall_at_k
     from repro.serve import Overloaded, ServeRejection
 
     names = sorted(tier.tenants)
@@ -381,16 +427,19 @@ async def _multitenant_episode(tier, ds, args, max_queue):
     # tenant's recall is measured against its own SLO
     W = max(1, max_queue // len(names))
     found = {n: [] for n in names}
+    served_idx = {n: [] for n in names}
     lats = {n: [] for n in names}
     for s in range(0, len(ds.queries), W):
         qs = ds.queries[s:s + W]
-        window = [(n, tier.submit(q, n)) for q in qs for n in names]
-        for name, fut in window:
+        window = [(n, s + j, tier.submit(q, n))
+                  for j, q in enumerate(qs) for n in names]
+        for name, qi, fut in window:
             try:
                 r = await fut
             except ServeRejection:
                 continue
             found[name].append(r.ids)
+            served_idx[name].append(qi)
             lats[name].append(r.latency_ms)
     tail_fraction = getattr(tier.batcher.target, "tail_fraction",
                             lambda: 0.0)()
@@ -398,8 +447,12 @@ async def _multitenant_episode(tier, ds, args, max_queue):
     for name in names:
         st = tier.tenants[name]
         n_ok = len(found[name])
-        rec = recall_at_k(np.stack(found[name]), ds.gt[:n_ok], k)
-        p50 = float(np.percentile(lats[name], 50))
+        # score each response against the gt row of the query it served
+        # — a mid-stream shed must not shift later results onto the
+        # wrong rows (that silently corrupts the drift telemetry)
+        rec = served_recall(found[name], served_idx[name], ds.gt, k)
+        p50 = (float(np.percentile(lats[name], 50)) if lats[name]
+               else float("nan"))
         verdict = tier.batcher.observe_served(
             name, recall=rec, latency_ms=p50, tail_fraction=tail_fraction)
         ok_slo = rec >= st.spec.target_recall
@@ -627,7 +680,12 @@ def main():
 
     frontier = None
     if args.load_frontier:
-        frontier = ckpt.load_frontier(args.load_frontier)
+        # a frontier stamped with a mutation epoch ages out: serving a
+        # compacted index off measurements of an older layout refuses
+        # loudly (StaleArtifactError) instead of quietly missing SLO
+        frontier = ckpt.load_frontier(
+            args.load_frontier,
+            current_epoch=getattr(target, "epoch", None))
         print(f"loaded {frontier.describe()} from {args.load_frontier}")
         if args.frontier_label is not None:
             pts = tuple(p for p in frontier.points
@@ -692,6 +750,7 @@ def main():
               f"(swept recall={op.recall:.3f} qps={op.qps:.0f} "
               f"dev_mem_mb={op.device_memory_bytes/1e6:.1f})")
         if args.drift_retune is not None or args.max_tail_frac is not None:
+            from repro.anns.api import supports_mutation
             from repro.anns.tune import DriftMonitor
             margin = (args.drift_retune if args.drift_retune is not None
                       else 0.02)
@@ -700,6 +759,11 @@ def main():
                 max_tail_frac=args.max_tail_frac, min_observations=2))
             print(f"drift monitor attached (margin={margin:.3f}, "
                   f"max_tail_frac={args.max_tail_frac})")
+            if supports_mutation(target):
+                from repro.anns.stream import BackgroundCompactor
+                server.attach_compactor(BackgroundCompactor(target))
+                print("background compactor attached (tail verdicts "
+                      "schedule fenced swaps off the serve loop)")
         if args.stream_demo is not None:
             _run_stream_drift_demo(server, target, ds, slo, args)
             return

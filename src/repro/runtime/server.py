@@ -200,6 +200,7 @@ class AnnsServer:
         self.queue: list[AnnsRequest] = []
         self.served = 0
         self.drift_monitor = None
+        self.compactor = None
 
     @property
     def backend(self):
@@ -228,18 +229,47 @@ class AnnsServer:
         :class:`repro.anns.tune.DriftMonitor` (fed via
         :meth:`observe_served`)."""
         self.drift_monitor = monitor
+        if self.compactor is not None:
+            self.compactor.attach_monitor(monitor)
+
+    def attach_compactor(self, compactor) -> None:
+        """Let tail-trigger drift verdicts schedule background
+        compaction (:class:`repro.anns.stream.BackgroundCompactor`)
+        instead of leaving the caller to run ``compact()`` inline.  The
+        attached drift monitor registers for in-flight suppression, and
+        — unless the compactor already has a warm spec — the post-swap
+        search program is warmed at this server's batch shape and
+        current params, so the first post-swap flush doesn't pay the
+        recompile."""
+        self.compactor = compactor
+        if self.drift_monitor is not None:
+            compactor.attach_monitor(self.drift_monitor)
+        if compactor.warm is None:
+            def _warm_spec():
+                d = index_dim(self.engine)
+                if d is None:
+                    return []
+                return [(np.zeros((self.max_batch, d), np.float32),
+                         self.params)]
+            compactor.warm = _warm_spec
 
     def observe_served(self, *, recall: float, latency_ms: float | None = None):
         """Fold one served window's measured telemetry into the attached
         drift monitor; the backend's live tail fraction rides along when
         the backend is mutable.  Returns the monitor's
-        :class:`~repro.anns.tune.DriftVerdict` (None when no monitor)."""
+        :class:`~repro.anns.tune.DriftVerdict` (None when no monitor).
+        A ``tail_frac`` verdict schedules the attached background
+        compactor (when one is attached) — the serving driver no longer
+        calls ``compact()`` itself."""
         if self.drift_monitor is None:
             return None
         tail_fn = getattr(self.backend, "tail_fraction", None)
         tail = float(tail_fn()) if callable(tail_fn) else 0.0
-        return self.drift_monitor.observe(recall=recall, latency_ms=latency_ms,
-                                          tail_fraction=tail)
+        verdict = self.drift_monitor.observe(
+            recall=recall, latency_ms=latency_ms, tail_fraction=tail)
+        if self.compactor is not None:
+            self.compactor.maybe_compact(verdict)
+        return verdict
 
     def apply_operating_point(self, point) -> None:
         """Adopt a re-chosen operating point mid-session (post-retune):

@@ -63,6 +63,7 @@ class ContinuousBatcher:
         self.clock = clock
         self._search = search_callable(target)
         self._dim = index_dim(target)
+        self._compactor = None
         #: virtual time = max pass ever reached; an idle tenant's pass is
         #: caught up to this on re-arrival so banked credit can't starve
         #: the tenants that kept the server busy meanwhile
@@ -219,15 +220,42 @@ class ContinuousBatcher:
                 f"{r.tenant!r} was served", tenant=r.tenant))
         return 0
 
+    def attach_compactor(self, compactor) -> None:
+        """Let any tenant's tail-trigger verdict schedule background
+        compaction (:class:`repro.anns.stream.BackgroundCompactor`).
+        Every tenant monitor registers for in-flight suppression —
+        one tenant's verdict fixes shared state, so *all* monitors must
+        hold fire while the swap is pending — and, unless the compactor
+        already has a warm spec, every distinct tenant group's search
+        program is warmed against the prepared layout before the swap."""
+        self._compactor = compactor
+        for state in self.tenants.values():
+            compactor.attach_monitor(getattr(state, "monitor", None))
+        if compactor.warm is None:
+            def _warm_spec():
+                d = index_dim(self.target)
+                if d is None:
+                    return []
+                q = np.zeros((self.max_batch, d), np.float32)
+                groups = {st.params for st in self.tenants.values()}
+                return [(q, params) for params in groups]
+            compactor.warm = _warm_spec
+
     def observe_served(self, tenant: str, *, recall: float,
                        latency_ms: float | None = None,
                        tail_fraction: float = 0.0) -> DriftVerdict | None:
         """Feed measured recall into telemetry + the tenant's drift
-        monitor; returns the verdict (or ``None`` without a monitor)."""
+        monitor; returns the verdict (or ``None`` without a monitor).
+        A ``tail_frac`` verdict schedules the attached background
+        compactor — tail growth is shared state, so whichever tenant
+        trips it first triggers the one fix for everybody."""
         self.telemetry.record_recall(tenant, recall)
-        return self.tenants[tenant].observe_served(
+        verdict = self.tenants[tenant].observe_served(
             recall=recall, latency_ms=latency_ms,
             tail_fraction=tail_fraction)
+        if self._compactor is not None:
+            self._compactor.maybe_compact(verdict)
+        return verdict
 
 
 class AsyncServeTier:
@@ -259,6 +287,9 @@ class AsyncServeTier:
     @property
     def tenants(self) -> dict:
         return self.batcher.tenants
+
+    def attach_compactor(self, compactor) -> None:
+        self.batcher.attach_compactor(compactor)
 
     def start(self) -> None:
         """Bind to the running loop and start the serve task."""

@@ -45,7 +45,8 @@ from repro.anns.tune import OperatingPoint, frontier_from_points
 from repro.runtime.server import AnnsServer, batch_k_policy, validate_query
 from repro.serve import (AdmissionQueue, AsyncServeTier, ContinuousBatcher,
                          DeadlineExceeded, LatencyHistogram, Overloaded,
-                         ServeRequest, ServerClosed, TenantSpec, Ticket,
+                         ServeRejection, ServeRequest, ServerClosed,
+                         TenantSpec, Ticket,
                          attach_drift_monitors, parse_tenant_specs,
                          resolve_tenants)
 
@@ -751,3 +752,64 @@ def test_serve_async_flag_validation():
     assert "frontier" in r.stderr
     r = _serve(["--max-queue", "8"])              # --max-queue sans --async
     assert r.returncode != 0
+
+
+# ---------------------------------------------------------------------------
+# served-recall accounting: sheds must not shift rows onto the wrong gt
+# ---------------------------------------------------------------------------
+
+def test_served_recall_scores_responses_against_their_own_gt_rows():
+    """Pure accounting check: with response 1 shed, responses for
+    queries 0 and 2 must score against gt rows 0 and 2 — the old
+    ``gt[:n_ok]`` form scored the second response against row 1."""
+    from repro.launch.serve import served_recall
+
+    gt = np.asarray([[10, 11], [20, 21], [30, 31]])
+    found = [np.asarray([10, 11]), np.asarray([30, 31])]  # query 1 shed
+    assert served_recall(found, [0, 2], gt, 2) == 1.0
+    # the naive prefix alignment calls the same episode half wrong
+    assert recall_at_k(np.stack(found), gt[:2], 2) == 0.5
+    assert np.isnan(served_recall([], [], gt, 2))   # fully shed: no sample
+
+
+def test_mid_stream_shed_does_not_shift_recall_rows(ds, ivf):
+    """Regression through the real batcher: force one deadline shed in
+    the middle of a stream and check the served-index bookkeeping keeps
+    every later response on its own ground-truth row."""
+    from repro.launch.serve import served_recall
+
+    class FakeClock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = FakeClock()
+    b = ContinuousBatcher(ivf, _tenants(TenantSpec("a")),
+                          max_batch=MAX_BATCH, max_queue=64, clock=clock)
+    n, shed_at = 6, 2
+    toks = [(i, b.submit(ds.queries[i], "a",
+                         deadline_ms=10.0 if i == shed_at else None))
+            for i in range(n)]
+    clock.t = 1.0            # the 10ms budget expires before any batch runs
+    while any(not tk.done for _, tk in toks):
+        b.step()
+
+    found, served = [], []
+    for i, tk in toks:
+        try:
+            r = tk.get()
+        except ServeRejection:
+            continue
+        found.append(np.asarray(r.ids))
+        served.append(i)
+    assert served == [i for i in range(n) if i != shed_at]
+    rec = served_recall(found, served, ds.gt, 10)
+    assert rec == pytest.approx(recall_at_k(
+        np.stack(found), np.asarray(ds.gt)[np.asarray(served)], 10))
+    # the pre-fix scoring—stack and compare against gt[:n_ok]—drags
+    # every post-shed response onto the previous query's gt row
+    naive = recall_at_k(np.stack(found), np.asarray(ds.gt)[:len(found)], 10)
+    assert rec > naive + 0.3
+    tot = b.telemetry.totals()
+    assert tot.shed_deadline == 1 and tot.served == n - 1

@@ -28,6 +28,7 @@ import os
 import re
 import subprocess
 import sys
+import threading
 from types import SimpleNamespace
 
 import numpy as np
@@ -39,8 +40,9 @@ from repro.anns.api import search_ef_ladder, supports_mutation
 from repro.anns.datasets import recall_at_k
 from repro.anns.engine import family_baseline
 from repro.anns.ivf import build_ivf, ivf_stats
-from repro.anns.stream import (DeltaTailFull, StreamingIvfBackend,
-                               exact_live_gt)
+from repro.anns.stream import (BackgroundCompactor, CompactionInFlight,
+                               DeltaTailFull, StaleCompaction,
+                               StreamingIvfBackend, exact_live_gt)
 from repro.anns.tune import (DriftMonitor, InfeasibleSLO, OperatingPoint,
                              RecallSLO, frontier_from_points,
                              resweep_and_choose)
@@ -535,3 +537,223 @@ def test_serve_drift_episode_subprocess():
     assert m, out[-2000:]
     assert float(m.group(1)) >= float(m.group(2))
     assert "slo restored" in out
+
+
+# ---------------------------------------------------------------------------
+# background compaction: two-phase prepare/commit + seqno-fenced swap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_mutations_during_background_build_survive_swap(ds, name):
+    """Inserts/deletes landing between prepare and commit are journaled
+    and replayed into the fresh epoch: post-swap exact search must
+    equal brute force over the final live set."""
+    b = _stream(name, ds)
+    _mutate(b, seed=11)
+    rng = np.random.default_rng(12)
+    prep = b.prepare_compaction()
+    mid_ids = b.insert(_new_vecs(rng, 16, ds.base.shape[1]))
+    b.delete(mid_ids[:4])                       # delete a journaled insert
+    b.delete(np.asarray([7, 8], np.int64))      # ...and snapshot members
+    b.commit_compaction(prep)
+    assert b.epoch == 1
+    assert b.n_live() == N_BASE + 80 - 50 + 16 - 4 - 2
+    res = b.search(ds.queries, _exact_params(b))
+    gt = exact_live_gt(b, ds.queries, 10)
+    # >= rather than ==: sharded partial reductions can flip an fp32
+    # distance tie at the k boundary; a real replay bug (lost insert,
+    # resurrected tombstone) costs whole result rows, not one entry
+    assert recall_at_k(np.asarray(res.ids), gt, 10) >= 0.995
+    returned = set(np.asarray(res.ids).ravel().tolist())
+    assert not returned & set(mid_ids[:4].tolist()) - {-1}
+    # surviving mid-flight inserts are served from the replayed tail
+    vecs, oids = b.live_vectors()
+    pos = int(np.flatnonzero(oids == int(mid_ids[-1]))[0])
+    probe = b.search(vecs[pos][None, :], _exact_params(b))
+    assert int(np.asarray(probe.ids)[0, 0]) == int(mid_ids[-1])
+
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_prepare_commit_lifecycle_guards(ds, name):
+    """One compaction in flight at a time; a prepared state is valid for
+    exactly one commit against the epoch it fenced."""
+    b = _stream(name, ds)
+    _mutate(b, seed=13)
+    prep = b.prepare_compaction()
+    with pytest.raises(CompactionInFlight):
+        b.prepare_compaction()
+    b.commit_compaction(prep)
+    with pytest.raises(StaleCompaction):        # already swapped
+        b.commit_compaction(prep)
+    prep2 = b.prepare_compaction()              # in-flight flag cleared
+    b.commit_compaction(prep2)
+    assert b.epoch == 2
+
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_fenced_swap_concurrent_searches_never_torn(ds, name):
+    """Searches racing the swap must see either the old or the new
+    epoch's state, never a mix.  The live set is identical on both
+    sides of the swap, so an exact search returning anything other
+    than brute-force ground truth means a torn view (e.g. the new
+    layout against the old tail mask)."""
+    b = _stream(name, ds)
+    _mutate(b, seed=17)
+    gt = exact_live_gt(b, ds.queries, 10)
+    params = _exact_params(b)
+    b.search(ds.queries, params)                # compile pre-swap path
+    stop = threading.Event()
+    results, errors = [], []
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                results.append(np.asarray(b.search(ds.queries, params).ids))
+        except BaseException as e:              # surfaced in the assert
+            errors.append(e)
+
+    t = threading.Thread(target=hammer, daemon=True)
+    t.start()
+    try:
+        for _ in range(3):                      # several swaps under fire
+            prep = b.prepare_compaction()
+            b.warm_compacted(prep, ds.queries, params)
+            b.commit_compaction(prep)
+    finally:
+        stop.set()
+        t.join(timeout=120)
+    assert not errors, errors
+    assert b.epoch == 3 and len(results) > 0
+    for ids in results:
+        # 0.995 not 1.0: tolerates a single fp32 tie-break flip at the
+        # k boundary; a torn view (new layout over the old tail mask)
+        # drops the whole 80-vector tail and lands far below this
+        assert recall_at_k(ids, gt, 10) >= 0.995
+
+
+def test_background_compactor_suppresses_trigger_while_in_flight(ds):
+    """The tail verdict that scheduled a compaction must not re-fire
+    while the fix is still in flight; after the swap the monitor is
+    rebased, un-suppressed, and the trigger re-arms."""
+    b = _stream("stream_ivf", ds)
+    _mutate(b, seed=19)
+    monitor = DriftMonitor(_point(), max_tail_frac=0.05,
+                           min_observations=1)
+    comp = BackgroundCompactor(b, monitors=[monitor])
+    v = monitor.observe(recall=0.95, tail_fraction=b.tail_fraction())
+    assert v.triggered and v.reason == "tail_frac"
+
+    gate = threading.Event()
+    orig = b.prepare_compaction
+    b.prepare_compaction = lambda: (gate.wait(60), orig())[1]
+    try:
+        assert comp.maybe_compact(v) is True
+        assert comp.in_flight and monitor.compaction_pending
+        # same pressure, while pending: suppressed at the monitor...
+        v2 = monitor.observe(recall=0.95, tail_fraction=b.tail_fraction())
+        assert not v2.triggered
+        assert comp.maybe_compact(v2) is False
+        # ...and even a stale triggered verdict cannot double-schedule
+        assert comp.maybe_compact(v) is False
+    finally:
+        gate.set()
+    assert comp.join(timeout=120)
+    assert b.epoch == 1 and comp.runs == 1
+    assert not monitor.compaction_pending
+    # fresh pressure on the new epoch re-arms the trigger
+    rng = np.random.default_rng(23)
+    b.insert(_new_vecs(rng, 120, ds.base.shape[1]))
+    v3 = monitor.observe(recall=0.95, tail_fraction=b.tail_fraction())
+    assert v3.triggered and v3.reason == "tail_frac"
+
+
+def test_background_compactor_worker_failure_surfaces(ds):
+    b = _stream("stream_ivf", ds)
+    _mutate(b, seed=29)
+
+    def boom():
+        raise RuntimeError("layout build exploded")
+
+    b.prepare_compaction = boom
+    comp = BackgroundCompactor(b)
+    assert comp.schedule() is True
+    with pytest.raises(RuntimeError, match="layout build exploded"):
+        comp.join(timeout=120)
+    assert comp.join(timeout=1)                 # error not raised twice
+
+
+# ---------------------------------------------------------------------------
+# drift verdict latency accounting + re-sweep provenance
+# ---------------------------------------------------------------------------
+
+def test_drift_verdict_latency_unobserved_is_none():
+    """No latency sample ever taken -> None, not a fabricated 0.0 ms
+    (which reads as an impossibly fast server downstream)."""
+    m = DriftMonitor(_point(), min_observations=1)
+    v = m.observe(recall=0.95)
+    assert v.latency_ewma_ms is None
+    assert "lat=n/a" in v.describe()
+    v = m.observe(recall=0.95, latency_ms=float("nan"))
+    assert v.latency_ewma_ms is None            # NaN windows don't count
+    v = m.observe(recall=0.95, latency_ms=4.0)
+    assert v.latency_ewma_ms == pytest.approx(4.0)
+    assert "lat=4.0ms" in v.describe()
+    v = m.observe(recall=0.95, latency_ms=float("nan"))
+    assert v.latency_ewma_ms == pytest.approx(4.0)   # EWMA not poisoned
+
+
+def test_resweep_frontier_stamps_live_count_and_epoch(ds):
+    """The re-swept frontier records what it measured: the *live*
+    vector count of the mutated index (not len(ds.base)) and the
+    mutation epoch it was swept at."""
+    b = _stream("stream_ivf", ds)
+    _mutate(b, seed=31)
+    b.compact()
+    ladder = list(search_ef_ladder(b))
+    measure, _ = _fake_measurer(lambda ef: 0.95)
+    _, fr = resweep_and_choose(b, ds, RecallSLO(0.5),
+                               _point(ef=ladder[1]), measure_fn=measure)
+    assert fr.n_base == b.n_live() == N_BASE + 80 - 50
+    assert fr.meta["n_live"] == b.n_live()
+    assert fr.meta["epoch"] == b.epoch == 1
+    assert fr.n_base != len(ds.base)            # the old bug's signature
+
+
+# ---------------------------------------------------------------------------
+# frontier age-out: epoch-stamped artifacts refuse to outlive the layout
+# ---------------------------------------------------------------------------
+
+def _frontier_with_meta(meta):
+    return frontier_from_points(
+        [_point()], dataset="sift-128-euclidean", n_base=100,
+        n_query=8, k=10, meta=meta)
+
+
+def test_frontier_age_out_refuses_stale_epoch(tmp_path):
+    path = str(tmp_path / "front.json")
+    ckpt.save_frontier(path, _frontier_with_meta({"epoch": 1}))
+    with pytest.raises(ckpt.StaleArtifactError, match="frontier"):
+        ckpt.load_frontier(path, current_epoch=3)
+    with pytest.warns(UserWarning, match="stale"):
+        fr = ckpt.load_frontier(path, current_epoch=3, stale_ok=True)
+    assert fr.meta["epoch"] == 1                # loaded despite the age
+    with pytest.raises(ckpt.StaleArtifactError, match="future"):
+        ckpt.load_frontier(path, current_epoch=0)   # wrong history
+
+
+def test_frontier_age_out_warns_within_allowance(tmp_path):
+    path = str(tmp_path / "front.json")
+    ckpt.save_frontier(path, _frontier_with_meta({"epoch": 2}))
+    fr = ckpt.load_frontier(path, current_epoch=2)      # same epoch: clean
+    assert fr.meta["epoch"] == 2
+    with pytest.warns(UserWarning, match="behind"):
+        ckpt.load_frontier(path, current_epoch=3, max_epoch_age=2)
+
+
+def test_frontier_age_out_ignores_unstamped(tmp_path):
+    """Build-time frontiers (read-only sweeps) carry no epoch and have
+    no age: they load cleanly whatever the index's epoch is."""
+    path = str(tmp_path / "front.json")
+    ckpt.save_frontier(path, _frontier_with_meta({}))
+    fr = ckpt.load_frontier(path, current_epoch=7)
+    assert "epoch" not in fr.meta
