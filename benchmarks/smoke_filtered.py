@@ -1,0 +1,94 @@
+"""CI bench smoke for filtered search: ``ivf`` vs ``sharded`` QPS/recall
+at three predicate selectivities plus the unfiltered baseline, written to
+``BENCH_filtered_smoke.json``.
+
+Filtered recall is measured against the *filtered* exact ground truth
+(``Dataset.filtered_gt``) — recall vs the unfiltered gt would punish the
+backend for correctly refusing non-matching neighbors.  The artifact
+records, per backend and selectivity, enough to catch both failure
+modes a filtered path can regress into:
+
+- **recall collapse** — the mask applied in the wrong layout order, an
+  id remap miss after compaction, pads leaking into results; and
+- **throughput collapse** — the mask forcing a retrace or falling off
+  the jit path.  The run asserts filtered QPS at selectivity 0.5 stays
+  within 2x of unfiltered (the mask rides the existing validity-mask
+  lane, so the marginal cost is one gather + AND).
+
+Sized for CI wall-clock; ``repro.anns.tune.sweep_frontier`` with a
+``filters=`` axis is the real harness.
+
+    PYTHONPATH=src python benchmarks/smoke_filtered.py --out .
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import time
+
+SELECTIVITIES = (0.5, 0.1, 0.02)
+
+
+def run(out_dir: str = ".", n_base: int = 2000, n_query: int = 32,
+        repeats: int = 1, backends=("ivf", "sharded")) -> str:
+    import jax
+    from repro.anns import SearchParams, make_dataset, registry
+    from repro.anns import selectivity_filter
+    from repro.anns.bench import build_timed, measure_point
+    from repro.anns.engine import family_baseline
+
+    ds = make_dataset("sift-128-euclidean", n_base=n_base, n_query=n_query)
+    payload = {
+        "bench": "smoke_filtered",
+        "dataset": "sift-128-euclidean",
+        "n_base": n_base,
+        "n_query": n_query,
+        "selectivities": list(SELECTIVITIES),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "unix_time": time.time(),
+        "curves": {},
+    }
+    for backend in backends:
+        v = dataclasses.replace(family_baseline(backend),
+                                nlist=32, kmeans_iters=2)
+        b = registry.create(backend, v, metric=ds.metric)
+        build_s = build_timed(b, ds.base)
+        b.set_attributes(ds.attrs)
+        rows = []
+        base = SearchParams(k=10, ef=128)
+        for sel in (None,) + SELECTIVITIES:   # None = unfiltered baseline
+            flt = None if sel is None else selectivity_filter(ds, sel)
+            pt = measure_point(b, ds,
+                               params=dataclasses.replace(base, filter=flt),
+                               repeats=repeats, build_seconds=build_s)
+            rows.append(dataclasses.asdict(pt))
+            tag = "unfiltered" if flt is None else f"sel={pt.selectivity:g}"
+            print(f"smoke_filtered/{backend}/{tag}: qps={pt.qps:.0f} "
+                  f"recall={pt.recall:.3f}")
+        payload["curves"][backend] = rows
+        # the mask is one gather + AND on the existing validity lane:
+        # selectivity 0.5 must not cost more than 2x throughput
+        qps_unf, qps_half = rows[0]["qps"], rows[1]["qps"]
+        assert qps_half >= 0.5 * qps_unf, (
+            f"{backend}: filtered QPS {qps_half:.0f} fell below half of "
+            f"unfiltered {qps_unf:.0f} — mask likely off the jit path")
+    path = os.path.join(out_dir, "BENCH_filtered_smoke.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=".")
+    ap.add_argument("--n-base", type=int, default=2000)
+    ap.add_argument("--n-query", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=1)
+    args = ap.parse_args()
+    run(out_dir=args.out, n_base=args.n_base, n_query=args.n_query,
+        repeats=args.repeats)

@@ -43,6 +43,16 @@ _EXPORTS = {
     "Dataset": "repro.anns.datasets",
     "make_dataset": "repro.anns.datasets",
     "DATASET_SPECS": "repro.anns.datasets",
+    # filtered search (repro.anns.filters is numpy-only: eager import is
+    # fine, but the lazy table keeps one consistent export mechanism)
+    "FilterPredicate": "repro.anns.filters",
+    "FilterError": "repro.anns.filters",
+    "EmptyPredicate": "repro.anns.filters",
+    "UnknownAttribute": "repro.anns.filters",
+    "AttributeMismatch": "repro.anns.filters",
+    "parse_filter": "repro.anns.filters",
+    "selectivity_filter": "repro.anns.datasets",
+    "filtered_recall_at_k": "repro.anns.datasets",
 }
 
 __all__ = sorted(_EXPORTS) + ["registry"]

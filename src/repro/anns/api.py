@@ -124,6 +124,13 @@ class SearchParams:
     from the backend's :class:`~repro.anns.engine.VariantConfig`".  With no
     variant either (``resolved(None)``) they fall back to the historical
     ``repro.anns.search.search`` kwarg defaults.
+
+    ``filter`` (a frozen, hashable
+    :class:`~repro.anns.filters.FilterPredicate`, or ``None`` for
+    unfiltered) restricts retrieval to the vectors matching an attribute
+    predicate; every backend compiles it to a per-vector bitmask AND-ed
+    into the validity masks already guarding pad slots and tombstones.
+    Slots without a matching vector come back as id ``-1``.
     """
     k: int = 10
     ef: int = 64
@@ -132,6 +139,7 @@ class SearchParams:
     patience: Optional[int] = None
     quantized: Optional[bool] = None
     rerank_factor: Optional[int] = None
+    filter: Optional[Any] = None       # FilterPredicate | None
 
     # legacy kwarg defaults of repro.anns.search.search (pre-registry API)
     _FALLBACK = {"gather_width": 1, "patience": 0, "quantized": False,

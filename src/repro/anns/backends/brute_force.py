@@ -17,14 +17,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.anns.api import SearchParams, SearchResult
+from repro.anns.filters import AttributeColumns
 from repro.anns.registry import register
+from repro.anns.search import BIG
 from repro.kernels.distance.ops import pairwise_distance
 from repro.kernels.topk.ops import topk_smallest
 
 
 @register("brute_force")
-class BruteForceBackend:
+class BruteForceBackend(AttributeColumns):
     name = "brute_force"
+
+    #: state_format 2: optional per-vector attribute columns (attr/<col>)
+    STATE_FORMAT = 2
 
     #: base vectors scanned per kernel launch (tile-aligned)
     chunk = 8192
@@ -38,6 +43,8 @@ class BruteForceBackend:
     # -- AnnsIndex protocol ------------------------------------------------
     def build(self, base: np.ndarray) -> jax.Array:
         self.index = jnp.asarray(base, jnp.float32)
+        self.attributes = None       # columns describe one base layout
+        self._clear_filter_caches()
         return self.index
 
     @staticmethod
@@ -52,11 +59,17 @@ class BruteForceBackend:
         n = base.shape[0]
         k = min(params.k, n)
         q = jnp.asarray(queries, jnp.float32)
+        # filtered: non-matching rows score BIG before the top-k cut, so
+        # this stays the exact (recall=1.0) anchor over the masked base
+        fmask = (self._row_mask_dev(params.filter)
+                 if params.filter is not None else None)
 
         vals, ids = [], []
         for lo in range(0, n, self.chunk):
             xc = base[lo: lo + self.chunk]
             d = pairwise_distance(q, xc, metric=self.metric)
+            if fmask is not None:
+                d = jnp.where(fmask[lo: lo + self.chunk][None, :], d, BIG)
             v, i = topk_smallest(d, min(k, xc.shape[0]))
             vals.append(v)
             ids.append(i + lo)
@@ -68,6 +81,8 @@ class BruteForceBackend:
             out_d, order = jax.lax.top_k(-allv, k)
             out_d = -out_d
             out_i = jnp.take_along_axis(alli, order, axis=1)
+        if fmask is not None:
+            out_i = jnp.where(out_d < BIG, out_i, -1)
         return SearchResult(ids=out_i, dists=out_d, steps=0,
                             expansions=jnp.asarray(n * q.shape[0]),
                             backend=self.name)
@@ -80,8 +95,11 @@ class BruteForceBackend:
     def to_state_dict(self) -> dict:
         assert self.index is not None, "build() first"
         return {"backend": self.name, "metric": self.metric,
-                "base": np.asarray(self.index)}
+                "state_format": self.STATE_FORMAT,
+                "base": np.asarray(self.index),
+                **self._attr_state_leaves()}
 
     def from_state_dict(self, state: dict) -> None:
         self.metric = state["metric"]
         self.index = jnp.asarray(state["base"])
+        self._restore_attr_leaves(state)

@@ -18,6 +18,7 @@ import numpy as np
 from repro.anns import construction, search as search_lib
 from repro.anns.api import (SearchParams, SearchResult, effective_ef,
                             round_ef)
+from repro.anns.filters import AttributeColumns
 from repro.anns.graph import GraphIndex
 from repro.anns.registry import register
 
@@ -27,8 +28,11 @@ def _array_bytes(*arrays) -> int:
 
 
 @register("graph")
-class GraphBeamBackend:
+class GraphBeamBackend(AttributeColumns):
     name = "graph"
+
+    #: state_format 2: optional per-vector attribute columns (attr/<col>)
+    STATE_FORMAT = 2
 
     def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
         if variant is None:
@@ -47,6 +51,8 @@ class GraphBeamBackend:
             ef_construction=v.ef_construction, rounds=v.nn_descent_rounds,
             alpha=v.alpha, num_entry_points=v.num_entry_points,
             quantize=self._build_quantized(), seed=self.seed)
+        self.attributes = None       # columns describe one base layout
+        self._clear_filter_caches()
         return self.index
 
     def _build_quantized(self) -> bool:
@@ -58,10 +64,40 @@ class GraphBeamBackend:
         ef = effective_ef(p.ef, p.target_recall, self.variant.adaptive_ef_coef)
         if ef != p.ef:
             ef = round_ef(ef)      # derived ef -> static ladder (jit hygiene)
+        if p.filter is not None:
+            return self._filtered_search(
+                jnp.asarray(queries, jnp.float32), p, ef,
+                prefilter_q=bool(p.quantized))
         ids, dists, steps, exps = search_lib.search(
             self.index, jnp.asarray(queries, jnp.float32),
             ef=ef, k=p.k, gather_width=p.gather_width, patience=p.patience,
             quantized=p.quantized, rerank=p.rerank_factor)
+        return SearchResult(ids=ids, dists=dists, steps=steps,
+                            expansions=exps, backend=self.name)
+
+    def _filtered_search(self, q, p: SearchParams, ef: int,
+                         *, prefilter_q: bool) -> SearchResult:
+        """Graph-family filtered search: mask at *result selection*.
+
+        The traversal itself stays predicate-blind (greedy routing needs
+        the full graph — restricting expansion to matching nodes would
+        disconnect it at low selectivity), so the whole visited beam
+        (``k=m``, not ``k``) becomes the rerank shortlist and the
+        predicate mask ANDs into the rerank validity mask alongside the
+        beam's own pad slots (dist BIG ⇒ never-filled slot whose id is
+        garbage).  Slots with no matching candidate come back as id -1.
+        """
+        from repro.anns.backends.quantized import fp32_rerank
+        idx = self.index
+        fmask = self._row_mask_dev(p.filter)
+        m = max(p.k, min(ef, int(idx.base.shape[0])))
+        cand, cand_d, steps, exps = search_lib.search(
+            idx, q, ef=ef, k=m, gather_width=p.gather_width,
+            patience=p.patience, quantized=prefilter_q, rerank=0)
+        valid = fmask[cand] & (cand_d < search_lib.BIG)
+        ids, dists = fp32_rerank(idx.base, q, cand, k=p.k,
+                                 metric=self.metric, valid=valid)
+        ids = jnp.where(dists < search_lib.BIG, ids, -1)
         return SearchResult(ids=ids, dists=dists, steps=steps,
                             expansions=exps, backend=self.name)
 
@@ -78,6 +114,7 @@ class GraphBeamBackend:
         state = {
             "backend": self.name,
             "metric": idx.metric,
+            "state_format": self.STATE_FORMAT,
             "neighbors": np.asarray(idx.neighbors),
             "entry_points": np.asarray(idx.entry_points),
             "base": np.asarray(idx.base),
@@ -86,6 +123,7 @@ class GraphBeamBackend:
         if idx.base_q is not None:
             state["base_q"] = np.asarray(idx.base_q)
             state["scales"] = np.asarray(idx.scales)
+        state.update(self._attr_state_leaves())
         return state
 
     def from_state_dict(self, state: dict) -> None:
@@ -100,3 +138,4 @@ class GraphBeamBackend:
                     if "base_q" in state else None),
             scales=(jnp.asarray(state["scales"])
                     if "scales" in state else None))
+        self._restore_attr_leaves(state)

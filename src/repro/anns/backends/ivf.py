@@ -25,6 +25,7 @@ from repro.anns import search as search_lib
 from repro.anns.api import (SearchParams, SearchResult, effective_ef,
                             snap_to_ladder)
 from repro.anns.backends.quantized import fp32_rerank
+from repro.anns.filters import AttributeColumns
 from repro.anns.ivf.layout import IvfIndex, build_ivf
 from repro.anns.registry import register
 from repro.kernels.distance.ops import pairwise_distance
@@ -77,7 +78,8 @@ def shortlist_width(params: SearchParams, k: int, n: int, nprobe: int,
 
 @functools.partial(jax.jit, static_argnames=(
     "nprobe", "k", "m", "metric", "quantized"))
-def _ivf_search(centroids, cells, ids, base, base_q, scales, queries, *,
+def _ivf_search(centroids, cells, ids, base, base_q, scales, queries,
+                fmask=None, *,
                 nprobe: int, k: int, m: int, metric: str, quantized: bool):
     """(B, d) queries -> (ids (B, k) original ids, dists (B, k) fp32).
 
@@ -92,6 +94,13 @@ def _ivf_search(centroids, cells, ids, base, base_q, scales, queries, *,
     never displace a real neighbor; duplicate ids appear only if the
     probed cells genuinely hold fewer than k vectors, which the caller's
     nprobe floor rules out.
+
+    ``fmask`` ((n,) bool in cell-major position space, or None) is the
+    filter predicate's bitmask: it ANDs into the same validity mask the
+    pad slots ride, cutting non-matching vectors out of both the scan cut
+    and the rerank.  ``None`` is an empty pytree, so the unfiltered trace
+    is byte-identical to the pre-filter program.  Slots left without a
+    matching vector surface as id -1 (dist BIG).
     """
     B = queries.shape[0]
     q32 = queries.astype(jnp.float32)
@@ -102,6 +111,8 @@ def _ivf_search(centroids, cells, ids, base, base_q, scales, queries, *,
     cand = cells[probe].reshape(B, -1)                         # (B, nprobe*pad)
     valid = cand >= 0
     pos = jnp.where(valid, cand, 0)
+    if fmask is not None:
+        valid = valid & fmask[pos]
     if quantized:
         vecs = base_q[pos].astype(jnp.float32) * scales[pos][..., None]
     else:
@@ -114,12 +125,17 @@ def _ivf_search(centroids, cells, ids, base, base_q, scales, queries, *,
     short_valid = jnp.take_along_axis(valid, keep, axis=1)
     out_pos, out_d = fp32_rerank(base, q32, short, k=k, metric=metric,
                                  valid=short_valid)
-    return ids[out_pos], out_d, jnp.sum(valid)
+    out_ids = jnp.where(out_d < BIG, ids[out_pos], -1)
+    return out_ids, out_d, jnp.sum(valid)
 
 
 @register("ivf")
-class IvfBackend:
+class IvfBackend(AttributeColumns):
     name = "ivf"
+
+    #: state_format 2: optional per-vector attribute columns (attr/<col>,
+    #: stored in cell-major position order to match the saved layout)
+    STATE_FORMAT = 2
 
     def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
         if variant is None:
@@ -137,7 +153,14 @@ class IvfBackend:
                                kmeans_iters=v.kmeans_iters,
                                metric=self.metric, seed=self.seed,
                                max_cell=getattr(v, "max_cell", 0) or None)
+        self.attributes = None       # columns describe one base layout
+        self._clear_filter_caches()
         return self.index
+
+    def _attr_order(self):
+        # attribute columns live in cell-major position space — the same
+        # permutation `ids` encodes — so fmask[pos] indexes directly
+        return np.asarray(self.index.ids)
 
     def _nprobe_for(self, params: SearchParams) -> int:
         return nprobe_for(self.variant, params, self.index.nlist)
@@ -168,9 +191,11 @@ class IvfBackend:
         # int8 scan is this backend's default; explicit quantized=False
         # falls back to fp32 cell scans (params win over backend defaults)
         quantized = True if params.quantized is None else bool(params.quantized)
+        fmask = (self._row_mask_dev(p.filter)
+                 if p.filter is not None else None)
         out_ids, out_d, scanned = _ivf_search(
             idx.centroids, idx.cells, idx.ids, idx.base, idx.base_q,
-            idx.scales, jnp.asarray(queries, jnp.float32),
+            idx.scales, jnp.asarray(queries, jnp.float32), fmask,
             nprobe=nprobe, k=k, m=m, metric=self.metric, quantized=quantized)
         return SearchResult(ids=out_ids, dists=out_d, steps=nprobe,
                             expansions=scanned, backend=self.name)
@@ -190,6 +215,7 @@ class IvfBackend:
         return {
             "backend": self.name,
             "metric": idx.metric,
+            "state_format": self.STATE_FORMAT,
             "centroids": np.asarray(idx.centroids),
             "cells": np.asarray(idx.cells),
             "ids": np.asarray(idx.ids),
@@ -197,6 +223,7 @@ class IvfBackend:
             "base_q": np.asarray(idx.base_q),
             "scales": np.asarray(idx.scales),
             "offsets": np.asarray(idx.offsets),
+            **self._attr_state_leaves(),
         }
 
     def from_state_dict(self, state: dict) -> None:
@@ -210,3 +237,4 @@ class IvfBackend:
             scales=jnp.asarray(state["scales"]),
             offsets=np.asarray(state["offsets"]),
             metric=state["metric"])
+        self._restore_attr_leaves(state)

@@ -78,6 +78,10 @@ class QuantizedPrefilterBackend(GraphBeamBackend):
         # (this backend's point), fp32 when the caller explicitly overrides
         # quantized=False (explicit params win over the backend default)
         prefilter_q = True if params.quantized is None else bool(params.quantized)
+        if p.filter is not None:
+            return self._filtered_search(
+                jnp.asarray(queries, jnp.float32), p, ef,
+                prefilter_q=prefilter_q)
         m = max(p.k, min(max(p.rerank_factor, 1) * p.k, max(ef, p.k)))
         q = jnp.asarray(queries, jnp.float32)
         cand, _, steps, exps = search_lib.search(

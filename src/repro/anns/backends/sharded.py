@@ -51,6 +51,7 @@ from repro.anns.api import SearchParams, SearchResult
 from repro.anns.backends.ivf import (nprobe_for, round_nprobe,
                                      shortlist_width)
 from repro.anns.backends.quantized import fp32_rescore
+from repro.anns.filters import AttributeColumns
 from repro.anns.ivf.layout import build_ivf
 from repro.anns.ivf.sharding import (ShardedIvfIndex, place_on_mesh,
                                      shard_ivf, shard_memory_bytes,
@@ -73,8 +74,8 @@ def _route(centroids, cell_shard, cell_row, queries, *, nprobe: int,
 
 
 def _scan_rerank_block(shard_id, cells_j, v0_j, bq_j, sc_j, bf_j,
-                       q32, owner, row, *, m_shard: int, metric: str,
-                       quantized: bool):
+                       q32, owner, row, fmask_j=None, *, m_shard: int,
+                       metric: str, quantized: bool):
     """One shard's scan + shard-local fp32 rerank.
 
     Runs unrolled per shard (single device) or inside ``shard_map``
@@ -85,6 +86,11 @@ def _scan_rerank_block(shard_id, cells_j, v0_j, bq_j, sc_j, bf_j,
     all-masked candidate block and returns an all-invalid shortlist.
     Returns (global positions, scan dists, reranked dists, validity,
     scanned count), each (B, m_shard) except the scalar count.
+
+    ``fmask_j`` ((Npad,) bool over this shard's local positions, or
+    None) is the filter predicate's bitmask — AND-ed into the same
+    validity that guards pad rows, so filtered-out vectors survive
+    neither the scan cut nor the rerank, and the merge sees them as BIG.
     """
     B = q32.shape[0]
     mine = owner == shard_id                                # (B, nprobe)
@@ -92,6 +98,8 @@ def _scan_rerank_block(shard_id, cells_j, v0_j, bq_j, sc_j, bf_j,
     cand = jnp.where(mine[..., None], cand, -1).reshape(B, -1)
     valid = cand >= 0
     pos = jnp.where(valid, cand, 0)                         # local pos
+    if fmask_j is not None:
+        valid = valid & fmask_j[pos]
     if quantized:
         vecs = bq_j[pos].astype(jnp.float32) * sc_j[pos][..., None]
     else:
@@ -127,7 +135,7 @@ def _merge_topk(gpos, sd, rd, valid, *, k: int, m_total: int):
 @functools.partial(jax.jit, static_argnames=(
     "nprobe", "k", "m", "metric", "quantized"))
 def _sharded_search(centroids, cell_shard, cell_row, cells, vec_start,
-                    base_q, scales, base_f, ids, queries, *,
+                    base_q, scales, base_f, ids, queries, fmask=None, *,
                     nprobe: int, k: int, m: int, metric: str,
                     quantized: bool):
     """(B, d) queries -> (ids (B, k) original ids, dists (B, k) fp32).
@@ -149,6 +157,7 @@ def _sharded_search(centroids, cell_shard, cell_row, cells, vec_start,
     outs = [_scan_rerank_block(
         jnp.int32(j), cells[j], vec_start[j], base_q[j], scales[j],
         base_f[j], q32, owner, row,
+        None if fmask is None else fmask[j],
         m_shard=m_shard, metric=metric, quantized=quantized)
         for j in range(n_shards)]
     gpos, sd, rd, valid = (jnp.stack(t) for t in list(zip(*outs))[:4])
@@ -156,7 +165,7 @@ def _sharded_search(centroids, cell_shard, cell_row, cells, vec_start,
 
     m_total = min(m, n_shards * m_shard)
     out_pos, out_d = _merge_topk(gpos, sd, rd, valid, k=k, m_total=m_total)
-    return ids[out_pos], out_d, scanned
+    return jnp.where(out_d < BIG, ids[out_pos], -1), out_d, scanned
 
 
 def _make_placed_search(mesh):
@@ -171,7 +180,7 @@ def _make_placed_search(mesh):
     @functools.partial(jax.jit, static_argnames=(
         "nprobe", "k", "m", "metric", "quantized"))
     def placed_search(centroids, cell_shard, cell_row, cells, vec_start,
-                      base_q, scales, base_f, ids, queries, *,
+                      base_q, scales, base_f, ids, queries, fmask=None, *,
                       nprobe: int, k: int, m: int, metric: str,
                       quantized: bool):
         n_shards, _, pad = cells.shape
@@ -179,41 +188,52 @@ def _make_placed_search(mesh):
                                  nprobe=nprobe, metric=metric)
         m_shard = min(m, nprobe * pad)
 
-        def block(cells_b, v0_b, bq_b, sc_b, bf_b, q32_, owner_, row_):
+        def block(cells_b, v0_b, bq_b, sc_b, bf_b, q32_, owner_, row_,
+                  *rest):
             j = jax.lax.axis_index("shard")
+            fm_b = rest[0][0] if rest else None
             gpos, sd, rd, valid, scanned = _scan_rerank_block(
                 j, cells_b[0], v0_b[0], bq_b[0], sc_b[0], bf_b[0],
-                q32_, owner_, row_, m_shard=m_shard, metric=metric,
+                q32_, owner_, row_, fm_b, m_shard=m_shard, metric=metric,
                 quantized=quantized)
             # the merge traffic, in full: (S, B, m_shard) ids+scores
             out = [jax.lax.all_gather(t, "shard")
                    for t in (gpos, sd, rd, valid)]
             return (*out, jax.lax.psum(scanned, "shard"))
 
+        in_specs = (P("shard", None, None), P("shard"),
+                    P("shard", None, None), P("shard", None),
+                    P("shard", None, None), P(), P(), P())
+        operands = (cells, vec_start, base_q, scales, base_f,
+                    q32, owner, row)
+        if fmask is not None:
+            # the filter bitmask is shard-local state like the slices:
+            # each device ANDs only its own (Npad,) row, no mask traffic
+            in_specs += (P("shard", None),)
+            operands += (fmask,)
         gpos, sd, rd, valid, scanned = shard_map(
             block, mesh=mesh,
-            in_specs=(P("shard", None, None), P("shard"),
-                      P("shard", None, None), P("shard", None),
-                      P("shard", None, None), P(), P(), P()),
+            in_specs=in_specs,
             out_specs=(P(), P(), P(), P(), P()),
-            check_rep=False)(cells, vec_start, base_q, scales, base_f,
-                             q32, owner, row)
+            check_rep=False)(*operands)
         m_total = min(m, n_shards * m_shard)
         out_pos, out_d = _merge_topk(gpos, sd, rd, valid,
                                      k=k, m_total=m_total)
-        return ids[out_pos], out_d, scanned
+        return jnp.where(out_d < BIG, ids[out_pos], -1), out_d, scanned
 
     return placed_search
 
 
 @register("sharded")
-class ShardedBackend:
+class ShardedBackend(AttributeColumns):
     """Cell-routed multi-shard IVF (see module docstring)."""
 
     name = "sharded"
     # state-dict format: v2 ships the rerank store as per-shard
     # ``shardN/base_f`` leaves; v1 (replicated ``base``) still loads.
-    STATE_FORMAT = 2
+    # v3 adds optional per-vector attribute columns (``attr/<col>``,
+    # global cell-major position order).
+    STATE_FORMAT = 3
 
     def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
         if variant is None:
@@ -224,6 +244,7 @@ class ShardedBackend:
         self.seed = seed
         self.index: ShardedIvfIndex | None = None
         self._placed_search = None
+        self._mesh = None
 
     # -- AnnsIndex protocol ------------------------------------------------
     def build(self, base: np.ndarray) -> ShardedIvfIndex:
@@ -235,7 +256,41 @@ class ShardedBackend:
                           max_cell=getattr(v, "max_cell", 0) or None)
         self.index = shard_ivf(inner, max(1, int(v.n_shards)))
         self._placed_search = None
+        self.attributes = None       # columns describe one base layout
+        self._clear_filter_caches()
         return self.index
+
+    def _attr_order(self):
+        # global cell-major position space, same permutation `ids` encodes
+        return np.asarray(self.index.ids)
+
+    def _clear_filter_caches(self) -> None:
+        super()._clear_filter_caches()
+        self._shard_fmask = {}
+
+    def _shard_mask_dev(self, predicate):
+        """Per-shard (S, Npad) form of the predicate bitmask: the global
+        position mask sliced by ``vec_bounds`` into each shard's padded
+        local-position row (pad rows False), device_put along the mesh's
+        shard axis when placed.  Cached per predicate."""
+        hit = self._shard_fmask.get(predicate)
+        if hit is not None:
+            return hit
+        gmask = self._row_mask(predicate)            # (n,) global positions
+        idx = self.index
+        vb = np.asarray(idx.vec_bounds)
+        npad = int(idx.base_q.shape[1])
+        m = np.zeros((idx.n_shards, npad), bool)
+        for j in range(idx.n_shards):
+            v0, v1 = int(vb[j]), int(vb[j + 1])
+            m[j, : v1 - v0] = gmask[v0:v1]
+        dev = jnp.asarray(m)
+        if self._mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            dev = jax.device_put(dev, NamedSharding(self._mesh,
+                                                    P("shard", None)))
+        self._shard_fmask[predicate] = dev
+        return dev
 
     def place_on_mesh(self, mesh) -> None:
         """Pin each shard's slice to its device on a ``("shard",)`` mesh
@@ -244,6 +299,8 @@ class ShardedBackend:
         assert self.index is not None, "build() first"
         self.index = place_on_mesh(self.index, mesh)
         self._placed_search = _make_placed_search(mesh)
+        self._mesh = mesh
+        self._shard_fmask = {}       # re-derive masks with placement
 
     def stats(self) -> dict:
         assert self.index is not None, "build() first"
@@ -276,6 +333,8 @@ class ShardedBackend:
         args = (idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
                 idx.vec_start, idx.base_q, idx.scales, idx.base_f, idx.ids,
                 jnp.asarray(queries, jnp.float32))
+        if p.filter is not None:
+            args += (self._shard_mask_dev(p.filter),)
         statics = dict(nprobe=nprobe, k=k, m=m, metric=self.metric,
                        quantized=quantized)
         return args, statics
@@ -344,6 +403,7 @@ class ShardedBackend:
             state[f"shard{j}/base_q"] = np.asarray(idx.base_q[j])
             state[f"shard{j}/scales"] = np.asarray(idx.scales[j])
             state[f"shard{j}/base_f"] = np.asarray(idx.base_f[j])
+        state.update(self._attr_state_leaves())
         return state
 
     def from_state_dict(self, state: dict) -> None:
@@ -383,3 +443,5 @@ class ShardedBackend:
             vec_bounds=np.asarray(state["vec_bounds"]),
             metric=state["metric"])
         self._placed_search = None
+        self._mesh = None
+        self._restore_attr_leaves(state)

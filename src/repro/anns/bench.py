@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.anns.api import SearchParams
-from repro.anns.datasets import Dataset, recall_at_k
+from repro.anns.datasets import Dataset, filtered_recall_at_k, recall_at_k
 from repro.anns.engine import Engine
 
 
@@ -42,6 +42,11 @@ class CurvePoint:
     # only for backends that split state across a mesh (the sharded
     # backend's whole point: device memory is O(N/S * d), total O(N * d)).
     device_memory_bytes: int = 0
+    # fraction of the base the measured filter predicate matches; 1.0 for
+    # unfiltered points.  Filtered points score recall against the
+    # *filtered* ground truth (Dataset.filtered_gt) — never against the
+    # unfiltered gt, which a predicate makes meaningless.
+    selectivity: float = 1.0
 
 
 DEFAULT_EF_SWEEP = (10, 16, 24, 32, 48, 64, 96, 128, 192, 256)
@@ -95,7 +100,15 @@ def measure_point(target, ds: Dataset, *, params: SearchParams | None = None,
         jax.block_until_ready(res.ids)
         times.append(time.perf_counter() - t0)
     t = float(np.median(times))
-    rec = recall_at_k(np.asarray(res.ids), ds.gt, params.k)
+    if params.filter is not None:
+        # a predicate changes the answer set: score against the filtered
+        # exact ground truth, never the unfiltered gt
+        fgt = ds.filtered_gt(params.filter, k=params.k)
+        rec = filtered_recall_at_k(np.asarray(res.ids), fgt, params.k)
+        sel = params.filter.selectivity(ds.attrs)
+    else:
+        rec = recall_at_k(np.asarray(res.ids), ds.gt, params.k)
+        sel = 1.0
     mem = int(backend.memory_bytes())
     # backends without a mesh split are single-device: worst device == total
     dev_fn = getattr(backend, "device_memory_bytes", None)
@@ -104,7 +117,8 @@ def measure_point(target, ds: Dataset, *, params: SearchParams | None = None,
                       p50_ms=1e3 * t / len(ds.queries),
                       backend=getattr(backend, "name", ""),
                       build_seconds=build_seconds,
-                      memory_bytes=mem, device_memory_bytes=dev)
+                      memory_bytes=mem, device_memory_bytes=dev,
+                      selectivity=sel)
 
 
 def sweep_params(base: SearchParams, ef: int) -> SearchParams:

@@ -5,11 +5,31 @@ are scaled down (CPU container) — the scale factor is recorded in
 EXPERIMENTS.md.  Clustered mixture-of-Gaussians structure produces a
 non-trivial local intrinsic dimension so graph quality actually matters
 (pure iid Gaussian would make every method look alike).
+
+Filtered search support (see :mod:`repro.anns.filters`):
+
+- Every dataset carries per-vector integer **attribute columns**
+  (``Dataset.attrs``), drawn from a *separate* deterministic rng stream
+  salted with ``name + "/attrs"`` — adding or re-parameterising columns
+  can never perturb the base/query/gt bytes that checkpoints and golden
+  tests pin.  Default columns: ``cat`` (100 uniform categories, so a
+  j-value categorical-set predicate has selectivity ~j/100) and
+  ``bucket`` (16 categories, for coarser predicates).
+- ``Dataset.filtered_gt(predicate)`` is the exact ground truth **among
+  the predicate-matching rows** — brute force over the masked base, ids
+  mapped back to global row numbers, rows with fewer than ``k`` matches
+  padded with ``-1``.  Results are cached per ``(predicate, k)`` (the
+  predicate is frozen/hashable), so a sweep over the ef ladder computes
+  each filtered gt once.
+- ``filtered_recall_at_k`` scores against that gt, never the unfiltered
+  one: hits are counted over the number of *true* matches per row
+  (``-1`` pads are ignored on both sides), matching the ann-benchmarks
+  filtered track.
 """
 from __future__ import annotations
 
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -46,10 +66,41 @@ class Dataset:
     queries: np.ndarray     # (nq, d)
     gt: np.ndarray          # (nq, k_gt) exact nearest neighbor ids
     k_gt: int
+    attrs: dict | None = None   # {name: (N,) int32} per-vector attributes
+    _fgt_cache: dict = field(default_factory=dict, repr=False)
 
     @property
     def metric(self) -> str:           # kernel metric name
         return "l2" if self.spec.metric == "l2" else "ip"
+
+    def filtered_gt(self, predicate, k: int | None = None) -> np.ndarray:
+        """Exact gt among the rows matching ``predicate`` — the filtered
+        anchor every backend is scored against.  Rows with fewer than
+        ``k`` matching vectors are padded with ``-1``.  Cached per
+        ``(predicate, k)``: filtered sweeps re-derive nothing."""
+        from repro.anns.filters import FilterError
+        if self.attrs is None:
+            raise FilterError(
+                f"dataset {self.spec.name!r} has no attribute columns")
+        k = self.k_gt if k is None else int(k)
+        key = (predicate, k)
+        hit = self._fgt_cache.get(key)
+        if hit is not None:
+            return hit
+        mask = predicate.mask(self.attrs, len(self.base))
+        rows = np.flatnonzero(mask).astype(np.int32)
+        if len(rows) == 0:
+            gt = np.full((len(self.queries), k), -1, np.int32)
+        else:
+            kk = min(k, len(rows))
+            sub = exact_ground_truth(self.base[rows], self.queries, kk,
+                                     self.metric)
+            gt = rows[sub]
+            if kk < k:
+                pad = np.full((len(gt), k - kk), -1, np.int32)
+                gt = np.concatenate([gt, pad], axis=1)
+        self._fgt_cache[key] = gt
+        return gt
 
 
 def _clustered(rng: np.random.Generator, n: int, dim: int, clusters: int,
@@ -81,19 +132,33 @@ def _clustered(rng: np.random.Generator, n: int, dim: int, clusters: int,
 
 def exact_ground_truth(base: np.ndarray, queries: np.ndarray, k: int,
                        metric: str) -> np.ndarray:
-    """Brute force with the jnp oracle, chunked over queries."""
+    """Brute force with the jnp oracle, chunked over queries.
+
+    Distance ties break *stably* by ascending id: numpy's stable argsort
+    keeps the original order among equal keys, so duplicate base vectors
+    always yield the lowest-id winner.  (``jax.lax.top_k``'s tie order is
+    an implementation detail that can differ across backends/versions —
+    gt, and therefore measured recall, must not.)
+    """
     out = []
     b = jnp.asarray(base)
     for i in range(0, len(queries), 512):
         q = jnp.asarray(queries[i:i + 512])
-        d = distance_ref(q, b, metric)
-        _, idx = jax.lax.top_k(-d, k)
-        out.append(np.asarray(idx))
+        d = np.asarray(distance_ref(q, b, metric))
+        idx = np.argsort(d, axis=1, kind="stable")[:, :k]
+        out.append(idx)
     return np.concatenate(out, axis=0).astype(np.int32)
 
 
+# default attribute columns: {name: cardinality}, values uniform over
+# [0, cardinality).  "cat" at 100 makes selectivity a direct dial: a
+# j-value categorical-set predicate keeps ~j% of the base.
+DEFAULT_ATTRIBUTES: dict[str, int] = {"cat": 100, "bucket": 16}
+
+
 def make_dataset(name: str, n_base: int = 20000, n_query: int = 200,
-                 k_gt: int = 100, seed: int = 0) -> Dataset:
+                 k_gt: int = 100, seed: int = 0,
+                 attributes: dict[str, int] | None = None) -> Dataset:
     spec = DATASET_SPECS[name]
     # crc32, not hash(): str hashing is salted per process, and a shipped
     # index (ckpt.save_index/load_index) must land on the *same* synthetic
@@ -106,7 +171,32 @@ def make_dataset(name: str, n_base: int = 20000, n_query: int = 200,
         queries /= np.maximum(np.linalg.norm(queries, axis=1, keepdims=True), 1e-9)
     metric = "l2" if spec.metric == "l2" else "ip"
     gt = exact_ground_truth(base, queries, k_gt, metric)
-    return Dataset(spec=spec, base=base, queries=queries, gt=gt, k_gt=k_gt)
+    # attribute columns come from their own salted stream (and are drawn in
+    # sorted column order): base/query/gt bytes are identical with or
+    # without them, so nothing pinned by golden tests or shipped
+    # checkpoints moves.
+    cards = DEFAULT_ATTRIBUTES if attributes is None else attributes
+    arng = np.random.default_rng(
+        seed + zlib.crc32((name + "/attrs").encode()) % (2 ** 31))
+    attrs = {c: arng.integers(0, card, size=n_base, dtype=np.int32)
+             for c, card in sorted(cards.items())}
+    return Dataset(spec=spec, base=base, queries=queries, gt=gt, k_gt=k_gt,
+                   attrs=attrs)
+
+
+def selectivity_filter(ds: Dataset, selectivity: float,
+                       attr: str = "cat"):
+    """A categorical-set predicate over ``ds.attrs[attr]`` keeping roughly
+    ``selectivity`` of the base (exact fraction = n_values/cardinality for
+    the uniform default columns).  The standard way benchmarks dial the
+    selectivity sweep axis."""
+    from repro.anns.filters import FilterError, FilterPredicate
+    if ds.attrs is None or attr not in ds.attrs:
+        raise FilterError(
+            f"dataset {ds.spec.name!r} has no attribute column {attr!r}")
+    card = int(ds.attrs[attr].max()) + 1
+    n_vals = max(1, round(float(selectivity) * card))
+    return FilterPredicate.isin(attr, range(n_vals))
 
 
 def recall_at_k(found: np.ndarray, gt: np.ndarray, k: int) -> float:
@@ -115,3 +205,19 @@ def recall_at_k(found: np.ndarray, gt: np.ndarray, k: int) -> float:
     for row_found, row_gt in zip(found[:, :k], gt[:, :k]):
         hits += len(set(row_found.tolist()) & set(row_gt.tolist()))
     return hits / (len(found) * k)
+
+
+def filtered_recall_at_k(found: np.ndarray, gt: np.ndarray, k: int) -> float:
+    """Recall against a filtered (``-1``-padded) gt, per the
+    ann-benchmarks filtered track: each row is scored against the true
+    matches that *exist* (``min(k, #matching rows)``), and ``-1`` pads
+    never count as hits on either side.  An all-empty predicate scores
+    1.0 — returning nothing is the correct answer."""
+    hits = 0
+    denom = 0
+    for row_found, row_gt in zip(found[:, :k], gt[:, :k]):
+        true = {int(i) for i in row_gt.tolist() if i >= 0}
+        got = {int(i) for i in row_found.tolist() if i >= 0}
+        hits += len(true & got)
+        denom += len(true)
+    return hits / denom if denom else 1.0

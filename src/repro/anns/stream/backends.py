@@ -60,6 +60,8 @@ from repro.anns.api import SearchParams, SearchResult
 from repro.anns.backends.ivf import IvfBackend, nprobe_for, round_nprobe, \
     shortlist_width
 from repro.anns.backends.sharded import ShardedBackend
+from repro.anns.filters import FilterError, UnknownAttribute, \
+    check_attributes
 from repro.anns.ivf.kmeans import assign, split_oversized
 from repro.anns.ivf.layout import layout_from_assignments
 from repro.anns.ivf.sharding import place_on_mesh, shard_ivf
@@ -105,10 +107,10 @@ class _SearchView:
     """
 
     __slots__ = ("index", "live", "tail_vecs", "tail_live", "ids_ext",
-                 "seqno", "epoch")
+                 "seqno", "epoch", "attrs", "tail_attrs")
 
     def __init__(self, index, live, tail_vecs, tail_live, ids_ext,
-                 seqno: int, epoch: int):
+                 seqno: int, epoch: int, attrs=None, tail_attrs=None):
         self.index = index
         self.live = live
         self.tail_vecs = tail_vecs
@@ -116,17 +118,49 @@ class _SearchView:
         self.ids_ext = ids_ext
         self.seqno = int(seqno)
         self.epoch = int(epoch)
+        # attribute columns in the view's own geometry (base like `live`,
+        # tail like `tail_live`), device-resident — a filtered search
+        # derives its bitmask from the snapshot it captured, so a
+        # concurrent mutation can never tear mask against arrays
+        self.attrs = attrs
+        self.tail_attrs = tail_attrs
+
+
+def _view_filter_masks(view: _SearchView, predicate):
+    """Compile ``predicate`` against a view's attribute columns into
+    device bool masks (base geometry, tail geometry).  The masks AND
+    into ``live`` / ``tail_live`` — the exact tombstone path — so the
+    jitted stream searches need no new arguments and no retrace: a
+    filtered call passes masks of the same shape/dtype as unfiltered
+    ones."""
+    if view.attrs is None:
+        raise UnknownAttribute(
+            f"filter on {predicate.attr!r} but the backend has no "
+            f"attribute columns — set_attributes() after build")
+    col = view.attrs.get(predicate.attr)
+    if col is None:
+        raise UnknownAttribute(
+            f"unknown attribute {predicate.attr!r} — available columns: "
+            f"{sorted(view.attrs)}")
+    vals = jnp.asarray(np.asarray(predicate.values, np.int32))
+    base_mask = (col[..., None] == vals).any(-1)
+    tail_mask = (view.tail_attrs[predicate.attr][..., None] == vals).any(-1)
+    return base_mask, tail_mask
 
 
 @dataclasses.dataclass(frozen=True)
 class PreparedCompaction:
     """Replacement layout built off the hot path by
     ``prepare_compaction`` plus the fence it was snapshotted under;
-    ``commit_compaction`` refuses it if the backend's epoch moved."""
+    ``commit_compaction`` refuses it if the backend's epoch moved.
+    ``attrs`` is the surviving attribute columns remapped into the new
+    layout's position space (rides the same permutation as the id
+    remap), or None when no columns are configured."""
     index: object
     epoch: int
     seqno: int
     empty: bool
+    attrs: object = None
 
 
 def _pack_mask(mask: np.ndarray) -> np.ndarray:
@@ -209,6 +243,12 @@ class _StreamCommon:
         self._tail_vecs = np.zeros(shape + (d,), np.float32)
         self._tail_ids = np.full(shape, -1, np.int32)
         self._tail_live = np.zeros(shape, bool)
+        # attribute columns survive adoption of a read-only snapshot that
+        # carried them (self.attributes set by the parent restore); a
+        # fresh build() resets them to None before reaching here
+        self._tail_attrs = (None if self.attributes is None else
+                            {c: np.full(shape, -1, np.int32)
+                             for c in self.attributes})
         self.seqno = 0
         self.epoch = 0
         self._next_id = int(ids.max(initial=-1)) + 1
@@ -223,6 +263,66 @@ class _StreamCommon:
         self._tail_pos = {}
         for slot in zip(*np.nonzero(self._tail_ids >= 0)):
             self._tail_pos[int(self._tail_ids[slot])] = slot
+
+    # -- attribute columns -------------------------------------------------
+    def set_attributes(self, attrs) -> None:
+        """Attach per-vector attribute columns to a *freshly built*
+        index — before any mutation, while the position->build-row map
+        (``index.ids``) still describes the build base.  From then on
+        ``insert(..., attrs=...)`` carries attributes forward, deletes
+        free them with their slot, and ``compact()`` remaps the column
+        through the same permutation as the id remap."""
+        with self._lock:
+            if self.seqno != 0 or self.epoch != 0 or self._compacting:
+                raise FilterError(
+                    "set_attributes must run on a freshly built index, "
+                    "before any mutation — attributes then ride inserts "
+                    "and compactions")
+            super().set_attributes(attrs)      # stored in position space
+            self._tail_attrs = {c: np.full(self._tail_shape(), -1,
+                                           np.int32)
+                                for c in self.attributes}
+            self._sync()
+
+    def live_attributes(self):
+        """Attribute rows of everything live, in ``live_vectors()``
+        order (base live positions, then tail slots) — the numpy-mirror
+        counterpart the lifecycle property tests compare against.  None
+        when no columns are configured."""
+        with self._lock:
+            if self.attributes is None:
+                return None
+            live_pos = np.flatnonzero(self._live)
+            tail_slots = np.nonzero(self._tail_live)
+            return {c: np.concatenate(
+                        [np.asarray(self.attributes[c])[live_pos],
+                         self._tail_attrs[c][tail_slots]]).astype(np.int32)
+                    for c in self.attributes}
+
+    def _normalize_insert_attrs(self, attrs, m: int):
+        """Validate one insert batch's attribute values into
+        ``{col: (m,) int32}`` covering every configured column (missing
+        columns fill with the -1 "unattributed" sentinel).  Typed
+        failures: attributes on an attribute-less backend, unknown
+        column names, wrong length/dtype."""
+        if attrs is None:
+            if self.attributes is None:
+                return None
+            return {c: np.full(m, -1, np.int32) for c in self.attributes}
+        if self.attributes is None:
+            raise UnknownAttribute(
+                "insert() got attribute values but the backend has no "
+                "attribute columns — set_attributes() on the built "
+                "index first")
+        unknown = set(attrs) - set(self.attributes)
+        if unknown:
+            raise UnknownAttribute(
+                f"insert() got unknown attribute columns "
+                f"{sorted(unknown)} — configured: "
+                f"{sorted(self.attributes)}")
+        cols = check_attributes(dict(attrs), m)
+        return {c: cols.get(c, np.full(m, -1, np.int32))
+                for c in self.attributes}
 
     # -- MutableAnnsIndex protocol ----------------------------------------
     def n_live(self) -> int:
@@ -250,6 +350,9 @@ class _StreamCommon:
             if s is not None:
                 self._tail_live[s] = False
                 self._tail_ids[s] = -1
+                if self._tail_attrs is not None:
+                    for col in self._tail_attrs.values():
+                        col[s] = -1       # freed slots are byte-stable
                 count += 1
         return count
 
@@ -264,13 +367,14 @@ class _StreamCommon:
             self._sync()
         return count
 
-    def insert(self, vectors, ids=None) -> np.ndarray:
+    def insert(self, vectors, ids=None, attrs=None) -> np.ndarray:
         assert self.index is not None, "build() first"
         vecs = np.ascontiguousarray(np.asarray(vectors, np.float32))
         if vecs.ndim == 1:
             vecs = vecs[None]
         m = len(vecs)
         with self._lock:
+            acols = self._normalize_insert_attrs(attrs, m)
             if ids is None:
                 ids = np.arange(self._next_id, self._next_id + m,
                                 dtype=np.int32)
@@ -282,10 +386,12 @@ class _StreamCommon:
                     raise ValueError(
                         f"id {int(i)} is already live — delete it "
                         f"first or pick a fresh id")
-            self._place_in_tail(vecs, ids)  # validates capacity, then fills
+            self._place_in_tail(vecs, ids, acols)  # validates cap, fills
             if self._compacting:
-                self._mutation_log.append(("insert", vecs.copy(),
-                                           ids.copy()))
+                self._mutation_log.append((
+                    "insert", vecs.copy(), ids.copy(),
+                    None if acols is None else
+                    {c: a.copy() for c, a in acols.items()}))
             self._next_id = max(self._next_id, int(ids.max()) + 1)
             self.seqno += 1
             self._sync()
@@ -315,6 +421,7 @@ class _StreamCommon:
                     "or abandon it before preparing another")
             index = self.index
             vecs, oids = self.live_vectors()
+            acols = self.live_attributes()
             fence_seqno, fence_epoch = self.seqno, self.epoch
             self._compacting = True
             self._mutation_log = []
@@ -324,6 +431,8 @@ class _StreamCommon:
                 d = int(np.asarray(index.centroids).shape[1])
                 vecs = np.zeros((1, d), np.float32)
                 oids = np.array([-1], np.int32)
+                if acols is not None:
+                    acols = {c: np.array([-1], np.int32) for c in acols}
             centroids = np.asarray(index.centroids)
             a, _ = assign(vecs, centroids, metric=self.metric)
             max_cell = getattr(self.variant, "max_cell", 0) or None
@@ -333,12 +442,17 @@ class _StreamCommon:
             inner = layout_from_assignments(vecs, a, centroids,
                                             metric=self.metric)
             # inner.ids maps positions -> rows of `vecs`; compose the
-            # surviving original ids on top
-            inner = dataclasses.replace(
-                inner, ids=jnp.asarray(oids[np.asarray(inner.ids)]))
+            # surviving original ids on top, and carry the attribute
+            # columns through the *same* permutation into the new
+            # layout's position space
+            perm = np.asarray(inner.ids)
+            inner = dataclasses.replace(inner, ids=jnp.asarray(oids[perm]))
+            new_attrs = (None if acols is None else
+                         {c: np.ascontiguousarray(a_[perm], np.int32)
+                          for c, a_ in acols.items()})
             return PreparedCompaction(
                 index=self._finalize_layout(inner), epoch=fence_epoch,
-                seqno=fence_seqno, empty=empty)
+                seqno=fence_seqno, empty=empty, attrs=new_attrs)
         except BaseException:
             with self._lock:
                 self._compacting = False
@@ -367,6 +481,8 @@ class _StreamCommon:
             log, self._mutation_log = self._mutation_log, []
             self._compacting = False
             self.index = prepared.index
+            self.attributes = prepared.attrs
+            self._clear_filter_caches()   # masks describe the old layout
             self._live = np.ones(self.index.n, bool)
             if prepared.empty:
                 self._live[:] = False
@@ -377,13 +493,17 @@ class _StreamCommon:
             self._tail_vecs = np.zeros_like(self._tail_vecs)
             self._tail_ids = np.full_like(self._tail_ids, -1)
             self._tail_live = np.zeros_like(self._tail_live)
+            self._tail_attrs = (None if self.attributes is None else
+                                {c: np.full(self._tail_shape(), -1,
+                                            np.int32)
+                                 for c in self.attributes})
             self.epoch += 1
             self.seqno += 1
             self._rebuild_maps()
             for entry in log:
                 if entry[0] == "insert":
-                    _, vecs, ids = entry
-                    self._place_in_tail(vecs, ids)
+                    _, vecs, ids, acols = entry
+                    self._place_in_tail(vecs, ids, acols)
                 else:
                     self._apply_delete(entry[1])
             self._sync()
@@ -420,13 +540,23 @@ class _StreamCommon:
 
     def _fresh_view(self, index) -> _SearchView:
         """A view over ``index`` with an all-live base and an empty tail
-        — the state ``commit_compaction`` publishes (pre-replay)."""
+        — the state ``commit_compaction`` publishes (pre-replay).
+        Throwaway attribute columns ride along when the backend has any,
+        so warming a *filtered* operating point compiles too (mask
+        contents are irrelevant to the jit cache, only shapes are)."""
         d = int(np.asarray(index.centroids).shape[1])
         shape = self._tail_shape_for(index)
+        attrs = tail_attrs = None
+        if self.attributes is not None:
+            attrs = {c: np.full(index.n, -1, np.int32)
+                     for c in self.attributes}
+            tail_attrs = {c: np.full(shape, -1, np.int32)
+                          for c in self.attributes}
         return self._make_view(index, np.ones(index.n, bool),
                                np.zeros(shape + (d,), np.float32),
                                np.full(shape, -1, np.int32),
-                               np.zeros(shape, bool), -1, -1)
+                               np.zeros(shape, bool), -1, -1,
+                               attrs, tail_attrs)
 
     # -- mutable-state (de)serialization ----------------------------------
     def _mutable_leaves(self) -> dict:
@@ -436,6 +566,9 @@ class _StreamCommon:
                       "next_id": int(self._next_id),
                       "tail_cap": int(self.tail_cap)}
             leaves.update(self._tail_leaves())
+            if self._tail_attrs is not None:
+                for c, a in self._tail_attrs.items():
+                    leaves[f"tail_attr/{c}"] = a.copy()
         return leaves
 
     def _restore_mutable(self, state: dict) -> None:
@@ -443,6 +576,19 @@ class _StreamCommon:
             self.tail_cap = int(state.get("tail_cap", self.tail_cap))
             self._live = _unpack_mask(state["live_bits"], (self.index.n,))
             self._restore_tail_leaves(state)
+            cols = {k.split("/", 1)[1]: np.ascontiguousarray(v, np.int32)
+                    for k, v in state.items()
+                    if k.startswith("tail_attr/")}
+            if cols:
+                self._tail_attrs = cols
+            elif self.attributes is not None:
+                # base carried attr columns but the delta predates them
+                # (or a fresh tail): every slot is unattributed
+                self._tail_attrs = {c: np.full(self._tail_shape(), -1,
+                                               np.int32)
+                                    for c in self.attributes}
+            else:
+                self._tail_attrs = None
             self.seqno = int(state["seqno"])
             self.epoch = int(state["epoch"])
             self._next_id = int(state["next_id"])
@@ -477,8 +623,9 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
 
     name = "stream_ivf"
     #: v1 = the read-only ivf layout (no stamp); v2 adds tail leaves +
-    #: tombstone bitmaps + mutation counters.  v1 snapshots still load.
-    STATE_FORMAT = 2
+    #: tombstone bitmaps + mutation counters; v3 adds optional attribute
+    #: columns (attr/<col> base + tail_attr/<col> tail).  v1/v2 load.
+    STATE_FORMAT = 3
 
     def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
         if variant is None:
@@ -503,7 +650,8 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
     def _finalize_layout(self, inner):
         return inner
 
-    def _place_in_tail(self, vecs: np.ndarray, ids: np.ndarray) -> None:
+    def _place_in_tail(self, vecs: np.ndarray, ids: np.ndarray,
+                       attrs=None) -> None:
         free = np.flatnonzero(self._tail_ids < 0)
         if len(free) < len(vecs):
             raise DeltaTailFull(
@@ -514,16 +662,23 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
         self._tail_vecs[slots] = vecs
         self._tail_ids[slots] = ids
         self._tail_live[slots] = True
+        if attrs is not None:
+            for c, col in attrs.items():
+                self._tail_attrs[c][slots] = col
         for s, i in zip(slots.tolist(), ids.tolist()):
             self._tail_pos[int(i)] = (int(s),)
 
     def _make_view(self, index, live, tail_vecs, tail_ids, tail_live,
-                   seqno, epoch) -> _SearchView:
+                   seqno, epoch, attrs=None, tail_attrs=None) -> _SearchView:
+        dattrs = dtail = None
+        if attrs is not None:
+            dattrs = {c: jnp.asarray(a) for c, a in attrs.items()}
+            dtail = {c: jnp.asarray(tail_attrs[c]) for c in attrs}
         return _SearchView(index, jnp.asarray(live),
                            jnp.asarray(tail_vecs), jnp.asarray(tail_live),
                            jnp.concatenate([index.ids,
                                             jnp.asarray(tail_ids)]),
-                           seqno, epoch)
+                           seqno, epoch, dattrs, dtail)
 
     def _sync(self) -> None:
         """Publish a fresh immutable view of the fixed-shape device
@@ -533,7 +688,8 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
         self._view = self._make_view(self.index, self._live,
                                      self._tail_vecs, self._tail_ids,
                                      self._tail_live, self.seqno,
-                                     self.epoch)
+                                     self.epoch, self.attributes,
+                                     self._tail_attrs)
 
     def search(self, queries, params: SearchParams) -> SearchResult:
         assert self.index is not None, "build() first"
@@ -553,9 +709,16 @@ class StreamingIvfBackend(_StreamCommon, IvfBackend):
             nprobe = min(round_nprobe(min_probe), idx.nlist)
         m = shortlist_width(p, k_base, idx.n, nprobe, idx.cell_pad)
         quantized = True if params.quantized is None else bool(params.quantized)
+        live, tail_live = view.live, view.tail_live
+        if p.filter is not None:
+            # the filter rides the tombstone masks: same shapes, same
+            # jitted program, zero new retrace buckets
+            base_mask, tail_mask = _view_filter_masks(view, p.filter)
+            live = live & base_mask
+            tail_live = tail_live & tail_mask
         out_ids, out_d, scanned = stream_ivf_search(
             idx.centroids, idx.cells, idx.base, idx.base_q, idx.scales,
-            view.live, view.tail_vecs, view.tail_live,
+            live, view.tail_vecs, tail_live,
             view.ids_ext, jnp.asarray(queries, jnp.float32),
             nprobe=nprobe, k=k, m=m, metric=self.metric, quantized=quantized)
         return SearchResult(ids=out_ids, dists=out_d, steps=nprobe,
@@ -609,8 +772,9 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
 
     name = "stream_sharded"
     #: v2 = the read-only shardN/base_f layout; v3 adds per-shard tail
-    #: leaves + tombstone bitmaps + mutation counters.  v1/v2 load fine.
-    STATE_FORMAT = 3
+    #: leaves + tombstone bitmaps + mutation counters; v4 adds optional
+    #: attribute columns (attr/<col> + tail_attr/<col>).  v1-v3 load.
+    STATE_FORMAT = 4
 
     def __init__(self, variant=None, *, metric: str = "l2", seed: int = 0):
         if variant is None:
@@ -659,7 +823,8 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
         a, _ = assign(vecs, np.asarray(idx.centroids), metric=self.metric)
         return np.asarray(idx.cell_shard)[a]
 
-    def _place_in_tail(self, vecs: np.ndarray, ids: np.ndarray) -> None:
+    def _place_in_tail(self, vecs: np.ndarray, ids: np.ndarray,
+                       attrs=None) -> None:
         shard_of = self._route_to_shards(vecs)
         frees = {}
         for j in np.unique(shard_of).tolist():
@@ -678,44 +843,70 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
             self._tail_vecs[j, s] = vecs[r]
             self._tail_ids[j, s] = ids[r]
             self._tail_live[j, s] = True
+            if attrs is not None:
+                for c in attrs:
+                    self._tail_attrs[c][j, s] = attrs[c][r]
             self._tail_pos[int(ids[r])] = (j, s)
 
     def _make_view(self, index, live_global, tail_vecs, tail_ids,
-                   tail_live, seqno, epoch) -> _SearchView:
+                   tail_live, seqno, epoch, attrs=None,
+                   tail_attrs=None) -> _SearchView:
         """Device view over ``index``: the global live mask expands to
         the per-shard padded layout; when mesh-placed, the mutable
         leaves are sharded along the same ``"shard"`` axis as the base
-        slices and ``ids_ext`` stays replicated."""
+        slices and ``ids_ext`` stays replicated.  Attribute columns
+        (global position space) expand exactly like ``live`` — pad rows
+        take the -1 sentinel, which no predicate over real values
+        matches."""
         vb = np.asarray(index.vec_bounds)
         npad = int(index.base_q.shape[1])
         live = np.zeros((index.n_shards, npad), bool)
         for j in range(index.n_shards):
             v0, v1 = int(vb[j]), int(vb[j + 1])
             live[j, : v1 - v0] = live_global[v0:v1]
+        a_sh = None
+        if attrs is not None:
+            a_sh = {}
+            for c, col in attrs.items():
+                col = np.asarray(col)
+                exp = np.full((index.n_shards, npad), -1, np.int32)
+                for j in range(index.n_shards):
+                    v0, v1 = int(vb[j]), int(vb[j + 1])
+                    exp[j, : v1 - v0] = col[v0:v1]
+                a_sh[c] = exp
         ids_ext = np.concatenate(
             [np.asarray(index.ids), np.asarray(tail_ids).reshape(-1)])
         if self._mesh is None:
-            return _SearchView(index, jnp.asarray(live),
-                               jnp.asarray(tail_vecs),
-                               jnp.asarray(tail_live),
-                               jnp.asarray(ids_ext), seqno, epoch)
+            return _SearchView(
+                index, jnp.asarray(live), jnp.asarray(tail_vecs),
+                jnp.asarray(tail_live), jnp.asarray(ids_ext), seqno, epoch,
+                None if a_sh is None else
+                {c: jnp.asarray(a) for c, a in a_sh.items()},
+                None if tail_attrs is None else
+                {c: jnp.asarray(a) for c, a in tail_attrs.items()})
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         def put(x, spec):
             return jax.device_put(jnp.asarray(x),
                                   NamedSharding(self._mesh, spec))
-        return _SearchView(index, put(live, P("shard", None)),
-                           put(tail_vecs, P("shard", None, None)),
-                           put(tail_live, P("shard", None)),
-                           put(ids_ext, P()), seqno, epoch)
+        return _SearchView(
+            index, put(live, P("shard", None)),
+            put(tail_vecs, P("shard", None, None)),
+            put(tail_live, P("shard", None)),
+            put(ids_ext, P()), seqno, epoch,
+            None if a_sh is None else
+            {c: put(a, P("shard", None)) for c, a in a_sh.items()},
+            None if tail_attrs is None else
+            {c: put(a, P("shard", None)) for c, a in tail_attrs.items()})
 
     def _sync(self) -> None:
         """Publish a fresh immutable view (see the ivf counterpart)."""
         self._view = self._make_view(self.index, self._live,
                                      self._tail_vecs, self._tail_ids,
                                      self._tail_live, self.seqno,
-                                     self.epoch)
+                                     self.epoch, self.attributes,
+                                     self._tail_attrs)
 
     def _view_invocation(self, view: _SearchView, queries,
                          params: SearchParams):
@@ -729,9 +920,16 @@ class StreamingShardedBackend(_StreamCommon, ShardedBackend):
             nprobe = min(round_nprobe(min_probe), idx.nlist)
         m = shortlist_width(p, k_base, idx.n, nprobe, idx.cell_pad)
         quantized = True if params.quantized is None else bool(params.quantized)
+        live, tail_live = view.live, view.tail_live
+        if p.filter is not None:
+            # predicate masks AND into the pad/tombstone liveness masks
+            # host-side: same shapes and dtypes, so no new jit trace
+            base_mask, tail_mask = _view_filter_masks(view, p.filter)
+            live = live & base_mask
+            tail_live = tail_live & tail_mask
         args = (idx.centroids, idx.cell_shard, idx.cell_row, idx.cells,
                 idx.vec_start, idx.base_q, idx.scales, idx.base_f,
-                view.live, view.tail_vecs, view.tail_live,
+                live, view.tail_vecs, tail_live,
                 view.ids_ext, jnp.asarray(queries, jnp.float32))
         statics = dict(nprobe=nprobe, k=k, m=m, metric=self.metric,
                        quantized=quantized)

@@ -30,16 +30,28 @@ from dataclasses import dataclass, field
 from typing import Iterable
 
 from repro.anns.api import SearchParams
+from repro.anns.filters import describe_filter, parse_filter
 
 #: Serialization format of :meth:`Frontier.to_json_dict`.  Bump when the
 #: point schema changes shape; loaders reject anything newer (same
 #: convention as index-checkpoint ``state_format``).
-FRONTIER_FORMAT = 1
+#: v2: points carry ``selectivity`` and ``params.filter`` (the predicate's
+#: canonical ``attr=v1|v2`` string, or None) — filtered and unfiltered
+#: operating points are distinct workloads on the same frontier.
+FRONTIER_FORMAT = 2
 
 # SearchParams fields that ride in the JSON (None = "backend default"
 # stays None, so a loaded point resolves exactly like the swept one).
+# ``filter`` is serialized separately: a FilterPredicate round-trips
+# through its canonical string form, not raw getattr.
 _PARAM_FIELDS = ("k", "ef", "target_recall", "gather_width", "patience",
                  "quantized", "rerank_factor")
+
+
+def _filter_str(p: OperatingPoint) -> str:
+    """Canonical string of the point's filter predicate ("" = unfiltered);
+    the workload key for ordering, dedup, and domination fencing."""
+    return describe_filter(getattr(p.params, "filter", None))
 
 
 @dataclass(frozen=True)
@@ -54,11 +66,16 @@ class OperatingPoint:
     memory_bytes: int = 0
     device_memory_bytes: int = 0
     label: str = ""           # provenance (variant name: "glass", "crinn", ...)
+    # fraction of the base the point's filter matches (1.0 = unfiltered);
+    # filtered points were scored against the *filtered* ground truth
+    selectivity: float = 1.0
 
     def to_json_dict(self) -> dict:
+        params = {f: getattr(self.params, f) for f in _PARAM_FIELDS}
+        params["filter"] = _filter_str(self) or None
         return {
             "backend": self.backend,
-            "params": {f: getattr(self.params, f) for f in _PARAM_FIELDS},
+            "params": params,
             "recall": float(self.recall),
             "qps": float(self.qps),
             "p50_ms": float(self.p50_ms),
@@ -66,24 +83,34 @@ class OperatingPoint:
             "memory_bytes": int(self.memory_bytes),
             "device_memory_bytes": int(self.device_memory_bytes),
             "label": self.label,
+            "selectivity": float(self.selectivity),
         }
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "OperatingPoint":
         params = SearchParams(**{f: d["params"][f] for f in _PARAM_FIELDS
                                  if f in d["params"]})
+        if d["params"].get("filter"):
+            params = dataclasses.replace(
+                params, filter=parse_filter(d["params"]["filter"]))
         return cls(backend=d["backend"], params=params,
                    recall=float(d["recall"]), qps=float(d["qps"]),
                    p50_ms=float(d.get("p50_ms", 0.0)),
                    build_seconds=float(d.get("build_seconds", 0.0)),
                    memory_bytes=int(d.get("memory_bytes", 0)),
                    device_memory_bytes=int(d.get("device_memory_bytes", 0)),
-                   label=d.get("label", ""))
+                   label=d.get("label", ""),
+                   selectivity=float(d.get("selectivity", 1.0)))
 
 
 def dominates(a: OperatingPoint, b: OperatingPoint) -> bool:
     """True iff ``a`` is at least as good as ``b`` on every optimized axis
-    (recall, QPS, device memory) and strictly better on at least one."""
+    (recall, QPS, device memory) and strictly better on at least one.
+    Points measured under *different filter predicates* never dominate
+    each other: recall against different ground truths is incomparable,
+    and a filtered workload must keep its own frontier."""
+    if _filter_str(a) != _filter_str(b):
+        return False
     ge = (a.recall >= b.recall and a.qps >= b.qps
           and a.device_memory_bytes <= b.device_memory_bytes)
     gt = (a.recall > b.recall or a.qps > b.qps
@@ -93,8 +120,9 @@ def dominates(a: OperatingPoint, b: OperatingPoint) -> bool:
 
 def _point_order(p: OperatingPoint) -> tuple:
     """Canonical (deterministic) point ordering for serialization and
-    stable choice tie-breaks: by backend, then effort, then telemetry."""
-    return (p.backend, p.label, p.params.ef, p.params.k,
+    stable choice tie-breaks: by backend, then workload (filter), then
+    effort, then telemetry."""
+    return (p.backend, p.label, _filter_str(p), p.params.ef, p.params.k,
             p.params.target_recall, -p.recall, -p.qps)
 
 
@@ -111,8 +139,8 @@ def pareto_prune(points: Iterable[OperatingPoint]) -> tuple:
     # collapse exact duplicates (same backend/params measured twice)
     seen, uniq = set(), []
     for p in kept:
-        key = (p.backend, p.label, tuple(getattr(p.params, f)
-                                         for f in _PARAM_FIELDS),
+        key = (p.backend, p.label, _filter_str(p),
+               tuple(getattr(p.params, f) for f in _PARAM_FIELDS),
                p.recall, p.qps, p.device_memory_bytes)
         if key not in seen:
             seen.add(key)

@@ -38,31 +38,45 @@ def _measure(target, ds, params, repeats, build_seconds):
 
 def sweep_target(target, ds, *, k: int = 10, repeats: int = 2,
                  ef_cap: int | None = None, label: str = "",
-                 build_seconds: float = 0.0, measure_fn=None) -> list:
+                 build_seconds: float = 0.0, measure_fn=None,
+                 filters=(None,)) -> list:
     """Sweep one *built* backend along its own effort ladder; returns raw
     (unpruned) :class:`OperatingPoint` rows.  ``measure_fn`` defaults to
     :func:`repro.anns.bench.measure_point` (injectable for determinism
-    tests)."""
+    tests).
+
+    ``filters`` is the workload axis: each entry (a
+    :class:`~repro.anns.filters.FilterPredicate` or ``None`` for
+    unfiltered) runs the whole ef ladder, and every resulting point is
+    stamped with the predicate's selectivity (filtered points score
+    against :meth:`~repro.anns.datasets.Dataset.filtered_gt`).  The
+    target must carry attribute columns (``set_attributes``) before a
+    non-None filter is swept."""
     from repro.anns.bench import sweep_params
     measure = measure_fn or _measure
-    base = SearchParams(k=k)
     points = []
-    for ef in search_ef_ladder(target, ef_cap=ef_cap):
-        params = sweep_params(base, ef)
-        pt = measure(target, ds, params, repeats, build_seconds)
-        points.append(OperatingPoint(
-            backend=getattr(target, "name", ""), params=params,
-            recall=float(pt.recall), qps=float(pt.qps),
-            p50_ms=float(pt.p50_ms), build_seconds=float(pt.build_seconds),
-            memory_bytes=int(pt.memory_bytes),
-            device_memory_bytes=int(pt.device_memory_bytes), label=label))
+    for flt in filters:
+        base = SearchParams(k=k, filter=flt)   # sweep_params keeps filter
+        sel = 1.0 if flt is None else float(flt.selectivity(ds.attrs))
+        for ef in search_ef_ladder(target, ef_cap=ef_cap):
+            params = sweep_params(base, ef)
+            pt = measure(target, ds, params, repeats, build_seconds)
+            points.append(OperatingPoint(
+                backend=getattr(target, "name", ""), params=params,
+                recall=float(pt.recall), qps=float(pt.qps),
+                p50_ms=float(pt.p50_ms),
+                build_seconds=float(pt.build_seconds),
+                memory_bytes=int(pt.memory_bytes),
+                device_memory_bytes=int(pt.device_memory_bytes),
+                label=label, selectivity=sel))
     return points
 
 
 def sweep_frontier(ds, *, backends=DEFAULT_TUNE_BACKENDS, targets=(),
                    variants=None, k: int = 10, repeats: int = 2,
                    ef_cap: int | None = None, seed: int = 0,
-                   measure_fn=None, meta: dict | None = None) -> Frontier:
+                   measure_fn=None, meta: dict | None = None,
+                   filters=(None,)) -> Frontier:
     """Build the QPS/recall/memory Pareto frontier of a dataset.
 
     ``backends`` are registry names built here with their family-baseline
@@ -72,10 +86,17 @@ def sweep_frontier(ds, *, backends=DEFAULT_TUNE_BACKENDS, targets=(),
     Either may be empty; sweeping nothing is an error — an empty frontier
     would make every SLO look infeasible for the wrong reason.
 
+    ``filters`` adds the filtered-workload axis (see
+    :func:`sweep_target`): when any entry is a predicate, backends built
+    here get the dataset's attribute columns attached, and already-built
+    ``targets`` without columns get them too.  Filtered and unfiltered
+    points share the frontier but never dominate each other.
+
     The returned :class:`Frontier` records the dataset identity (name,
     sizes, seed) so a load-time mismatch is visible before a pick from
     it is trusted.
     """
+    filtered = any(f is not None for f in filters)
     swept = []
     built = list(targets)
     if backends:
@@ -94,11 +115,15 @@ def sweep_frontier(ds, *, backends=DEFAULT_TUNE_BACKENDS, targets=(),
     if not swept:
         raise ValueError("sweep_frontier with no backends and no targets "
                          "— nothing to measure")
+    if filtered:
+        for target, _ in swept:
+            if getattr(target, "attributes", None) is None:
+                target.set_attributes(ds.attrs)
     points = []
     for target, build_s in swept:
         points.extend(sweep_target(target, ds, k=k, repeats=repeats,
                                    ef_cap=ef_cap, build_seconds=build_s,
-                                   measure_fn=measure_fn))
+                                   measure_fn=measure_fn, filters=filters))
     return frontier_from_points(
         points, dataset=ds.spec.name, n_base=len(ds.base),
         n_query=len(ds.queries), k=k, seed=seed, meta=meta)
@@ -117,5 +142,6 @@ def frontier_from_curve(backend: str, curve, *, k: int = 10, label: str = "",
         recall=float(pt.recall), qps=float(pt.qps), p50_ms=float(pt.p50_ms),
         build_seconds=float(pt.build_seconds),
         memory_bytes=int(pt.memory_bytes),
-        device_memory_bytes=int(pt.device_memory_bytes), label=label)
+        device_memory_bytes=int(pt.device_memory_bytes), label=label,
+        selectivity=float(getattr(pt, "selectivity", 1.0)))
         for pt in curve]

@@ -30,6 +30,11 @@ in place; ``--drift-retune MARGIN``/``--max-tail-frac FRAC`` attach a
 ``--stream-demo N`` runs the scripted drift episode end-to-end (insert N
 drifted vectors -> tail trigger -> compact -> recall drift -> ladder
 re-sweep -> SLO restored), printing greppable ``drift:`` markers.
+
+Filtered search: ``--filter 'attr=v1|v2'`` serves every request under
+an attribute predicate (recall scored against the filtered ground
+truth), and ``--filter-demo`` runs the scripted unfiltered-vs-filtered
+episode at three selectivities (greppable ``filter:`` markers).
 """
 import argparse
 import time
@@ -267,6 +272,51 @@ def _run_stream_drift_demo(server, target, ds, slo, args):
     print(f"drift: post-retune recall={post:.3f} "
           f"target={slo.target_recall:.3f} "
           f"{'slo restored' if post >= slo.target_recall else 'SLO NOT MET'}")
+
+
+def _run_filter_demo(target, ds, args):
+    """Scripted filtered-serving episode (greppable ``filter:`` markers).
+
+    One unfiltered window anchors the comparison, then the same request
+    stream runs under predicates at three selectivities.  Filtered
+    recall is scored against the *filtered* exact ground truth
+    (``Dataset.filtered_gt``) — the predicate changes the answer set, so
+    scoring against the unfiltered gt would be meaningless.
+    """
+    import dataclasses
+
+    import numpy as np
+    from repro.anns import SearchParams
+    from repro.anns.datasets import (filtered_recall_at_k, recall_at_k,
+                                     selectivity_filter)
+    from repro.runtime.server import AnnsServer
+
+    k = args.k
+    rng = np.random.default_rng(0)
+    order = rng.integers(0, len(ds.queries), size=args.n_requests)
+
+    def episode(params, gt, scorer):
+        server = AnnsServer(target, max_batch=args.max_batch, params=params)
+        t0 = time.time()
+        for i in order:
+            server.submit(ds.queries[i])
+        responses = server.run()
+        dt = time.time() - t0
+        found = np.stack([r.ids for r in responses])
+        return scorer(found, gt[order]), len(responses) / dt
+
+    base = SearchParams(k=k, ef=args.ef)
+    rec, qps = episode(base, ds.gt, lambda f, g: recall_at_k(f, g, k))
+    print(f"filter: unfiltered recall@{k}={rec:.3f} qps={qps:,.0f}")
+    for sel in (0.5, 0.1, 0.02):
+        pred = selectivity_filter(ds, sel)
+        fgt = ds.filtered_gt(pred, k=k)
+        rec, qps = episode(dataclasses.replace(base, filter=pred), fgt,
+                           lambda f, g: filtered_recall_at_k(f, g, k))
+        print(f"filter: selectivity={pred.selectivity(ds.attrs):.3f} "
+              f"({pred.attr} in {len(pred.values)} values) "
+              f"recall@{k}={rec:.3f} qps={qps:,.0f} "
+              f"(scored vs filtered gt)")
 
 
 def _run_async_tier(target, ds, frontier, args, ap):
@@ -551,6 +601,17 @@ def main():
                          "N drifted vectors, compact on the tail trigger, "
                          "re-tune on the recall trigger (needs a "
                          "streaming backend + SLO mode + both drift flags)")
+    # -- filtered search (repro.anns.filters) ----------------------------
+    ap.add_argument("--filter", default=None, metavar="EXPR",
+                    help="serve filtered queries: 'attr=v' or "
+                         "'attr=v1|v2|...' over the dataset's attribute "
+                         "columns; recall is scored against the filtered "
+                         "ground truth")
+    ap.add_argument("--filter-demo", action="store_true",
+                    help="run the scripted filtered-serving episode: an "
+                         "unfiltered anchor window, then the same "
+                         "traffic at three predicate selectivities "
+                         "(greppable 'filter:' markers)")
     # -- async serving tier (repro.serve) --------------------------------
     ap.add_argument("--async", dest="async_tier", action="store_true",
                     help="serve through the asyncio continuous-batching "
@@ -613,6 +674,13 @@ def main():
     if args.async_tier and args.stream_demo is not None:
         ap.error("--stream-demo drives the closed-loop AnnsServer; drop "
                  "--async")
+    if args.filter_demo and args.async_tier:
+        ap.error("--filter-demo drives the closed-loop AnnsServer; drop "
+                 "--async")
+    if args.filter and args.target_recall is not None:
+        ap.error("--filter serves explicit params; a filtered SLO pick "
+                 "needs a frontier swept under the same predicate "
+                 "(tune.sweep_frontier filters=...)")
 
     import dataclasses
 
@@ -677,6 +745,17 @@ def main():
             target.place_on_mesh(mesh)
             print(f"placed {ns} cell shards on {ns} devices "
                   f"({target.device_memory_bytes()/1e6:.1f} MB/device)")
+
+    if args.filter or args.filter_demo:
+        # a restored index may already carry its attribute columns
+        # (attr/<col> checkpoint leaves); freshly built targets get the
+        # dataset's deterministic columns attached here
+        if getattr(target, "attributes", None) is None:
+            target.set_attributes(ds.attrs)
+            print(f"attribute columns attached: {sorted(ds.attrs)}")
+    if args.filter_demo:
+        _run_filter_demo(target, ds, args)
+        return
 
     frontier = None
     if args.load_frontier:
@@ -768,8 +847,16 @@ def main():
             _run_stream_drift_demo(server, target, ds, slo, args)
             return
     else:
+        pred = None
+        if args.filter:
+            from repro.anns.filters import parse_filter, require_filterable
+            pred = parse_filter(args.filter)
+            require_filterable(pred, getattr(target, "attributes", None))
+            print(f"serving filtered params: {pred} "
+                  f"(selectivity={pred.selectivity(ds.attrs):.3f})")
         server = AnnsServer(target, max_batch=args.max_batch,
-                            params=SearchParams(k=args.k, ef=args.ef))
+                            params=SearchParams(k=args.k, ef=args.ef,
+                                                filter=pred))
     rng = np.random.default_rng(0)
     order = rng.integers(0, len(ds.queries), size=args.n_requests)
     t0 = time.time()
@@ -779,7 +866,12 @@ def main():
     dt = time.time() - t0
     lat = np.array([r.latency_ms for r in responses])
     found = np.stack([r.ids for r in responses])
-    rec = recall_at_k(found, ds.gt[order], args.k)
+    if server.params.filter is not None:
+        from repro.anns.datasets import filtered_recall_at_k
+        fgt = ds.filtered_gt(server.params.filter, k=args.k)
+        rec = filtered_recall_at_k(found, fgt[order], args.k)
+    else:
+        rec = recall_at_k(found, ds.gt[order], args.k)
     print(f"served {len(responses)} requests in {dt:.2f}s "
           f"({len(responses)/dt:,.0f} QPS)")
     print(f"recall@{args.k}={rec:.3f}  latency p50={np.percentile(lat,50):.1f}ms "

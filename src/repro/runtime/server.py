@@ -295,6 +295,13 @@ class AnnsServer:
             k = self.params.k
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
+        if self.params.filter is not None:
+            # typed fail-fast at submit time: an unfilterable backend
+            # (no attribute columns / unknown attr) must not surface as
+            # an opaque crash inside the jitted flush
+            from repro.anns.filters import require_filterable
+            require_filterable(self.params.filter,
+                               getattr(self.backend, "attributes", None))
         self.queue.append(AnnsRequest(validate_query(
             query, index_dim(self.engine)), k))
 

@@ -1,0 +1,117 @@
+"""Cross-backend differential suite: every registered backend, at the
+max-effort rung of its own static ladder with ``quantized=False``, must
+return *exactly* the brute-force anchor's ids — unfiltered and under
+attribute predicates at three selectivities, on an l2 and an ip dataset.
+
+Why exactness is the right bar (not a recall threshold):
+
+- brute_force scans everything in fp32 — the recall=1.0 anchor.
+- graph / quantized_prefilter at ``ef >= n`` visit the whole connected
+  graph, and the filtered path reranks the *entire* visited beam in
+  fp32, so the top-k among matching rows is exact.
+- ivf / sharded / stream_* at the ladder's top ef probe every cell
+  (``nprobe == nlist``) and rerank in fp32; the sharded merge is
+  provably identical to the unsharded scan.
+
+So any per-id disagreement is a real defect — a mask applied to the
+wrong layout order, an id remap miss, a pad slot leaking into results —
+not measurement noise.  Filtered rows with fewer than k matching
+vectors must agree on the ``-1`` padding too (compared verbatim).
+
+The suite runs every name in ``registry.available()``: a newly
+registered backend is pulled into the bar automatically.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.anns import SearchParams, make_dataset, registry
+from repro.anns.api import search_ef_ladder
+from repro.anns.datasets import selectivity_filter
+from repro.anns.engine import family_baseline
+
+#: one l2 and one ip dataset (Dataset.metric maps "angular" -> "ip")
+DATASETS = ("sift-128-euclidean", "glove-25-angular")
+SELECTIVITIES = (0.5, 0.1, 0.02)
+N_BASE, N_QUERY, K = 240, 16, 10
+ANCHOR = "brute_force"
+
+
+def _variant(name):
+    v = dataclasses.replace(family_baseline(name), backend=name)
+    if name in ("ivf", "sharded", "stream_ivf", "stream_sharded"):
+        # small cell count: the ladder's top ef reaches nprobe == nlist
+        # quickly, and k-means on 240 vectors stays fast
+        v = dataclasses.replace(v, nlist=8, kmeans_iters=2)
+    if name in ("sharded", "stream_sharded"):
+        v = dataclasses.replace(v, n_shards=2)
+    return v
+
+
+@pytest.fixture(scope="module", params=DATASETS)
+def stack(request):
+    """(dataset, {name: built backend with attribute columns})."""
+    ds = make_dataset(request.param, n_base=N_BASE, n_query=N_QUERY,
+                      k_gt=K, seed=3)
+    backends = {}
+    for name in registry.available():
+        b = registry.create(name, _variant(name), metric=ds.metric, seed=3)
+        b.build(ds.base)
+        b.set_attributes(ds.attrs)
+        backends[name] = b
+    return ds, backends
+
+
+def _max_effort_ids(backend, ds, predicate) -> np.ndarray:
+    """Row-sorted result ids at the backend's top ladder rung, fp32."""
+    ef = search_ef_ladder(backend)[-1]
+    res = backend.search(ds.queries, SearchParams(
+        k=K, ef=ef, quantized=False, filter=predicate))
+    ids = np.asarray(res.ids)
+    assert ids.shape == (N_QUERY, K), (backend.name, ids.shape)
+    # sort within each row: ties aside, the *set* per row is the
+    # contract; -1 pads sort first and must agree in count too
+    return np.sort(ids, axis=1)
+
+
+def test_brute_force_anchor_matches_dataset_gt(stack):
+    """The anchor itself reproduces the dataset's exact ground truth,
+    unfiltered and filtered — everything else is measured against it."""
+    ds, backends = stack
+    anchor = backends[ANCHOR]
+    got = _max_effort_ids(anchor, ds, None)
+    assert np.array_equal(got, np.sort(ds.gt[:, :K], axis=1))
+    for sel in SELECTIVITIES:
+        pred = selectivity_filter(ds, sel)
+        fgt = ds.filtered_gt(pred, k=K)
+        got = _max_effort_ids(anchor, ds, pred)
+        assert np.array_equal(got, np.sort(fgt, axis=1)), sel
+
+
+@pytest.mark.parametrize("name", [n for n in registry.available()
+                                  if n != ANCHOR])
+def test_unfiltered_matches_anchor(stack, name):
+    ds, backends = stack
+    want = _max_effort_ids(backends[ANCHOR], ds, None)
+    got = _max_effort_ids(backends[name], ds, None)
+    bad = np.flatnonzero((want != got).any(axis=1))
+    assert not len(bad), (name, bad[:5], want[bad[:2]], got[bad[:2]])
+
+
+@pytest.mark.parametrize("sel", SELECTIVITIES)
+@pytest.mark.parametrize("name", [n for n in registry.available()
+                                  if n != ANCHOR])
+def test_filtered_matches_anchor(stack, name, sel):
+    """Filtered differential at selectivity ``sel``: identical id sets
+    per query — including the -1 pads where fewer than k rows match."""
+    ds, backends = stack
+    pred = selectivity_filter(ds, sel)
+    want = _max_effort_ids(backends[ANCHOR], ds, pred)
+    got = _max_effort_ids(backends[name], ds, pred)
+    bad = np.flatnonzero((want != got).any(axis=1))
+    assert not len(bad), (name, sel, bad[:5], want[bad[:2]], got[bad[:2]])
+    # every non-pad id actually satisfies the predicate
+    mask = pred.mask(ds.attrs, N_BASE)
+    real = got[got >= 0]
+    assert mask[real].all(), (name, sel)

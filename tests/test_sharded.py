@@ -301,10 +301,10 @@ def test_sharded_state_dict_ckpt_roundtrip(big_ds, big_ivf, tmp_path):
     np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
     assert clone.memory_bytes() == sh.memory_bytes()
     assert clone.index.n_shards == 2
-    # v2 layout: the rerank store ships as per-shard leaves, never as a
-    # replicated (N, d) fp32 array
+    # v2+ layout: the rerank store ships as per-shard leaves, never as
+    # a replicated (N, d) fp32 array (v3 added attribute-column leaves)
     state = sh.to_state_dict()
-    assert state["state_format"] == 2
+    assert state["state_format"] >= 2
     assert "base" not in state
     assert state["shard0/base_f"].dtype == np.float32
 

@@ -37,7 +37,10 @@ import pytest
 from repro import ckpt
 from repro.anns import SearchParams, make_dataset, registry
 from repro.anns.api import search_ef_ladder, supports_mutation
-from repro.anns.datasets import recall_at_k
+from repro.anns.datasets import (exact_ground_truth, filtered_recall_at_k,
+                                 recall_at_k)
+from repro.anns.filters import (AttributeMismatch, FilterError,
+                                FilterPredicate, UnknownAttribute)
 from repro.anns.engine import family_baseline
 from repro.anns.ivf import build_ivf, ivf_stats
 from repro.anns.stream import (BackgroundCompactor, CompactionInFlight,
@@ -757,3 +760,181 @@ def test_frontier_age_out_ignores_unstamped(tmp_path):
     ckpt.save_frontier(path, _frontier_with_meta({}))
     fr = ckpt.load_frontier(path, current_epoch=7)
     assert "epoch" not in fr.meta
+
+
+# ---------------------------------------------------------------------------
+# attribute lifecycle: columns ride insert -> tail -> tombstone -> compact
+# ---------------------------------------------------------------------------
+
+def _assert_attrs_match_mirror(b, mirror):
+    """live_attributes() must equal the numpy mirror bit-for-bit, row-
+    aligned on live_vectors() ids — for every configured column."""
+    _, ids_l = b.live_vectors()
+    got = b.live_attributes()
+    assert set(got) == {"cat", "bucket"}
+    assert set(ids_l.tolist()) == set(mirror)
+    for c, col in got.items():
+        want = np.array([mirror[int(i)][c] for i in ids_l], np.int32)
+        assert col.dtype == np.int32 and np.array_equal(col, want), c
+
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_attribute_lifecycle_matches_numpy_mirror(ds, name):
+    """Property test: through interleaved inserts (fully-, partially-,
+    and un-attributed batches), deletes, and a mid-history compact(),
+    the attribute columns stay equal to an id-keyed numpy mirror — and a
+    filtered exact search over the mutated index still reproduces brute
+    force over the matching live rows."""
+    b = _stream(name, ds)
+    b.set_attributes(ds.attrs)
+    rng = np.random.default_rng(11)
+    d = ds.base.shape[1]
+    mirror = {i: {"cat": int(ds.attrs["cat"][i]),
+                  "bucket": int(ds.attrs["bucket"][i])}
+              for i in range(N_BASE)}
+    _assert_attrs_match_mirror(b, mirror)
+
+    # step 0: unattributed, 1: "cat" only, 2+: both columns
+    for step in range(4):
+        m = 40
+        vecs = _new_vecs(rng, m, d)
+        if step == 0:
+            attrs = None
+        elif step == 1:
+            attrs = {"cat": rng.integers(0, 100, m)}
+        else:
+            attrs = {"cat": rng.integers(0, 100, m),
+                     "bucket": rng.integers(0, 16, m)}
+        new_ids = b.insert(vecs, attrs=attrs)
+        for j, i in enumerate(new_ids.tolist()):
+            mirror[i] = {
+                "cat": -1 if attrs is None else int(attrs["cat"][j]),
+                "bucket": -1 if attrs is None or "bucket" not in attrs
+                else int(attrs["bucket"][j])}
+        live = np.array(sorted(mirror), np.int64)
+        dead = rng.choice(live, 15, replace=False)
+        assert b.delete(dead) == len(dead)
+        for i in dead.tolist():
+            del mirror[i]
+        _assert_attrs_match_mirror(b, mirror)
+        if step == 2:
+            b.compact()                 # remap rides the id permutation
+            _assert_attrs_match_mirror(b, mirror)
+
+    # filtered exact search over the mutated index == brute force over
+    # the matching live rows (position-order mask, fp32, all cells)
+    pred = FilterPredicate.isin("cat", range(20))
+    vecs_l, ids_l = b.live_vectors()
+    keep = np.array([mirror[int(i)]["cat"] in range(20) for i in ids_l])
+    rows = np.flatnonzero(keep)
+    p = _exact_params(b)
+    assert len(rows) >= p.k             # no -1 pads to reason about
+    fgt = ids_l[rows][exact_ground_truth(vecs_l[rows], ds.queries,
+                                         p.k, ds.metric)]
+    res = b.search(ds.queries, dataclasses.replace(p, filter=pred))
+    found = np.asarray(res.ids)
+    real = found[found >= 0]
+    assert all(mirror[int(i)]["cat"] in range(20) for i in real)
+    assert filtered_recall_at_k(found, fgt, p.k) == 1.0
+
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_attribute_all_dead_compact_and_refill(ds, name):
+    """Deleting everything and compacting leaves empty (not stale)
+    attribute columns; fresh attributed inserts then serve filtered
+    searches against only the new generation."""
+    b = _stream(name, ds)
+    b.set_attributes(ds.attrs)
+    _, ids_l = b.live_vectors()
+    assert b.delete(ids_l.astype(np.int64)) == len(ids_l)
+    b.compact()
+    assert b.n_live() == 0
+    got = b.live_attributes()
+    assert set(got) == {"cat", "bucket"}
+    assert all(len(col) == 0 for col in got.values())
+
+    rng = np.random.default_rng(13)
+    vecs = _new_vecs(rng, 8, ds.base.shape[1])
+    new_ids = b.insert(vecs, attrs={"cat": np.full(8, 7),
+                                    "bucket": np.arange(8)})
+    res = b.search(vecs, dataclasses.replace(
+        _exact_params(b, k=1), filter=FilterPredicate.eq("cat", 7)))
+    assert np.asarray(res.ids).ravel().tolist() == new_ids.tolist()
+
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_attr_history_twice_is_byte_stable(ds, name):
+    """The compact() determinism bar extends to attribute state: the
+    same attributed mutation history twice yields byte-identical
+    ``attr/`` and ``tail_attr/`` leaves."""
+    states = []
+    for _ in range(2):
+        b = _stream(name, ds)
+        b.set_attributes(ds.attrs)
+        rng = np.random.default_rng(17)
+        b.insert(_new_vecs(rng, 60, ds.base.shape[1]),
+                 attrs={"cat": rng.integers(0, 100, 60)})
+        b.delete(rng.choice(N_BASE, 25, replace=False).astype(np.int64))
+        b.compact()
+        b.insert(_new_vecs(rng, 10, ds.base.shape[1]))   # unattributed
+        states.append(b.to_state_dict())
+    a, c = states
+    assert a.keys() == c.keys()
+    assert any(k.startswith("attr/") for k in a)
+    assert any(k.startswith("tail_attr/") for k in a)
+    for key in a:
+        va, vc = a[key], c[key]
+        if isinstance(va, np.ndarray):
+            assert va.dtype == vc.dtype and va.tobytes() == vc.tobytes(), key
+        else:
+            assert va == vc, key
+
+
+@pytest.mark.parametrize("name", ["stream_ivf", "stream_sharded"])
+def test_attrs_survive_ckpt_base_plus_delta(ds, name, tmp_path):
+    """Base checkpoint + delta replay restores the attribute columns
+    exactly — the restored index serves the same filtered results."""
+    b = _stream(name, ds)
+    b.set_attributes(ds.attrs)
+    path = str(tmp_path / "idx.ckpt")
+    ckpt.save_index(path, b)
+    rng = np.random.default_rng(19)
+    b.insert(_new_vecs(rng, 48, ds.base.shape[1]),
+             attrs={"cat": rng.integers(0, 100, 48),
+                    "bucket": rng.integers(0, 16, 48)})
+    b.delete(rng.choice(N_BASE, 30, replace=False).astype(np.int64))
+    ckpt.save_index_delta(path, b)
+
+    b2 = ckpt.load_index(path)
+    _, ids_a = b.live_vectors()
+    _, ids_b = b2.live_vectors()
+    assert np.array_equal(ids_a, ids_b)
+    ga, gb = b.live_attributes(), b2.live_attributes()
+    assert set(ga) == set(gb)
+    for c in ga:
+        assert np.array_equal(ga[c], gb[c]), c
+    p = dataclasses.replace(_exact_params(b),
+                            filter=FilterPredicate.isin("cat", range(30)))
+    assert np.array_equal(np.asarray(b.search(ds.queries, p).ids),
+                          np.asarray(b2.search(ds.queries, p).ids))
+
+
+def test_stream_insert_attr_failures(ds):
+    """Malformed attribute input fails fast with typed errors — no
+    partial mutation slips in first."""
+    b = _stream("stream_ivf", ds)
+    vecs = _new_vecs(np.random.default_rng(23), 4, ds.base.shape[1])
+    # attrs on an attribute-less backend
+    with pytest.raises(UnknownAttribute, match="no attribute columns"):
+        b.insert(vecs, attrs={"cat": np.zeros(4, np.int32)})
+    b.set_attributes(ds.attrs)
+    n0, s0 = b.n_live(), b.seqno
+    with pytest.raises(UnknownAttribute, match="unknown"):
+        b.insert(vecs, attrs={"color": np.zeros(4, np.int32)})
+    with pytest.raises(AttributeMismatch):
+        b.insert(vecs, attrs={"cat": np.zeros(3, np.int32)})
+    assert (b.n_live(), b.seqno) == (n0, s0)    # rejected batches left no trace
+    # set_attributes after mutation is a typed refusal
+    b.insert(vecs)
+    with pytest.raises(FilterError, match="freshly built"):
+        b.set_attributes(ds.attrs)
